@@ -1,0 +1,44 @@
+"""Decode-path microbenchmarks (host wall-clock, CPU).
+
+Measures the three decode implementations on growing tensor sizes:
+  * ECF8-TPU vectorized jnp decode (the in-graph serving path),
+  * ECF8-TPU Pallas kernel in interpret mode (correctness vehicle — real
+    perf is the TPU target, recorded as such),
+  * ECF8-FR static decode (collectives path).
+Reports MB/s of decoded fp8 output; the jnp path is the number that
+matters on this container.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import fixedrate, stats, tpu_format
+from .common import timed
+
+
+def run(verbose: bool = True):
+    rows = []
+    for n in (1 << 16, 1 << 20, 1 << 22):
+        bits = stats.synthesize_fp8_weights((n,), alpha=1.9, seed=n % 11)
+        ct = tpu_format.encode(bits)
+        cf = fixedrate.encode(bits)
+
+        out, t_jnp = timed(lambda: np.asarray(tpu_format.decode_jnp(ct)))
+        assert np.array_equal(out, bits)
+        out2, t_fr = timed(lambda: np.asarray(fixedrate.decode_jnp(cf)))
+        assert np.array_equal(out2, bits)
+
+        row = {"n": n,
+               "tpu_jnp_MBps": n / t_jnp / 1e6,
+               "fr_MBps": n / t_fr / 1e6,
+               "tpu_ratio": ct.ratio("ragged"), "fr_ratio": cf.ratio}
+        rows.append(row)
+        if verbose:
+            print(f"n={n:9d}  ECF8-TPU jnp {row['tpu_jnp_MBps']:8.1f} MB/s"
+                  f"  ECF8-FR {row['fr_MBps']:8.1f} MB/s"
+                  f"  (ratios {row['tpu_ratio']:.3f}/{row['fr_ratio']:.3f})")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,79 @@
+"""Aggregate the dry-run artifacts into the EXPERIMENTS.md roofline table.
+
+Reads experiments/artifacts/*.json (written by repro.launch.dryrun) and
+prints the per-(arch x shape x mesh) three-term roofline with the dominant
+bottleneck, MODEL_FLOPS ratio and the mfu bound.  Used both as a benchmark
+(it asserts every non-skipped cell compiled) and as the §Roofline report
+generator (--markdown).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "artifacts")
+
+
+def load(mesh: str = "single", tag: str = ""):
+    rows = []
+    suffix = f"__{mesh}{('__' + tag) if tag else ''}.json"
+    for f in sorted(glob.glob(os.path.join(ARTIFACTS, "*" + suffix))):
+        if not tag and "__" in os.path.basename(f)[:-5].split(
+                f"__{mesh}")[-1]:
+            continue  # tagged artifact; only exact-suffix matches
+        a = json.load(open(f))
+        if a.get("mesh") != mesh:
+            continue
+        rows.append(a)
+    return rows
+
+
+def run(verbose: bool = True, mesh: str = "single", markdown: bool = False,
+        tag: str = ""):
+    rows = load(mesh, tag)
+    ok = [a for a in rows if not a.get("skipped") and "error" not in a]
+    skipped = [a for a in rows if a.get("skipped")]
+    failed = [a for a in rows if "error" in a]
+    assert not failed, [f"{a['arch']}/{a['shape']}" for a in failed]
+
+    hdr = (f"| arch | shape | compute s | memory s | collective s | "
+           f"dominant | useful | mfu_bound |") if markdown else (
+        f"{'arch':26s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+        f"{'coll':>9s} {'dominant':>10s} {'useful':>7s} {'mfu_bd':>7s}")
+    lines = [hdr]
+    if markdown:
+        lines.append("|---|---|---|---|---|---|---|---|")
+    for a in sorted(ok, key=lambda a: (a["arch"], a["shape"])):
+        r = a["roofline"]
+        if markdown:
+            lines.append(
+                f"| {a['arch']} | {a['shape']} | {r['t_compute']:.3f} | "
+                f"{r['t_memory']:.3f} | {r['t_collective']:.3f} | "
+                f"{r['dominant']} | {r['useful_flops_ratio']:.3f} | "
+                f"{r['mfu_bound']:.4f} |")
+        else:
+            lines.append(
+                f"{a['arch']:26s} {a['shape']:12s} {r['t_compute']:9.3f} "
+                f"{r['t_memory']:9.3f} {r['t_collective']:9.3f} "
+                f"{r['dominant']:>10s} {r['useful_flops_ratio']:7.3f} "
+                f"{r['mfu_bound']:7.4f}")
+    if verbose:
+        print("\n".join(lines))
+        print(f"\n{len(ok)} cells ok, {len(skipped)} skipped "
+              f"(long_500k rule), 0 failed  [mesh={mesh}"
+              f"{', tag=' + tag if tag else ''}]")
+    return ok
+
+
+if __name__ == "__main__":
+    md = "--markdown" in sys.argv
+    tag = ""
+    for a in sys.argv[1:]:
+        if a.startswith("--tag="):
+            tag = a.split("=", 1)[1]
+    for m in ("single", "multi"):
+        print(f"\n===== mesh: {m} =====")
+        run(mesh=m, markdown=md, tag=tag)

@@ -1,0 +1,51 @@
+"""Benchmark suite entry point: one benchmark per paper table/figure.
+
+  fig1_entropy       — paper Fig. 1 (exponent entropy across archs)
+  table1_memory      — paper Table 1 (lossless memory savings)
+  table2_throughput  — paper Table 2 (throughput under memory budget,
+                       roofline form on this CPU-only container)
+  decode_microbench  — decode-path MB/s (host wall-clock)
+  roofline_table     — §Roofline aggregation of the dry-run artifacts
+                       (skipped gracefully when artifacts are absent)
+
+Usage:  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (decode_microbench, fig1_entropy, roofline_table,
+                   table1_memory, table2_throughput)
+    suites = [
+        ("fig1_entropy", fig1_entropy.run),
+        ("table1_memory", table1_memory.run),
+        ("table2_throughput", table2_throughput.run),
+        ("decode_microbench", decode_microbench.run),
+        ("roofline_table", roofline_table.run),
+    ]
+    failures = []
+    for name, fn in suites:
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            fn(verbose=True)
+            print(f"[{name}] OK in {time.time() - t0:.1f}s")
+        except AssertionError as e:
+            if name == "roofline_table":
+                print(f"[{name}] skipped/failed: {e}")
+            else:
+                failures.append(name)
+                traceback.print_exc()
+        except FileNotFoundError as e:
+            print(f"[{name}] skipped (no artifacts): {e}")
+    print(f"\n{'=' * 72}")
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+    print("all benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

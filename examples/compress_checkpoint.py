@@ -1,0 +1,67 @@
+"""Checkpoint-compression example: ECF8 on the fault-tolerance path.
+
+Saves an fp8 model checkpoint twice — raw and ECF8-compressed — then
+restores the compressed one and proves bit-exactness, reporting the size
+difference.  At 1000-node scale, restore bandwidth gates MTTR; the paper's
+compression ratio applies directly to restart time.
+
+Usage:  PYTHONPATH=src python examples/compress_checkpoint.py
+"""
+import os
+import tempfile
+
+import numpy as np
+import jax
+
+from repro.checkpoint import restore_tree, save_tree
+from repro.configs import get, smoke_variant
+from repro.core import stats
+from repro.core.store import fp8_cast_tree
+from repro.models import model as M
+import jax.numpy as jnp
+
+
+def dir_bytes(d):
+    return sum(os.path.getsize(os.path.join(r, f))
+               for r, _, fs in os.walk(d) for f in fs)
+
+
+def main():
+    # a ~20M-param variant: big enough that per-tensor coding overheads
+    # (codebooks, lane padding) are amortized like in a real checkpoint
+    from dataclasses import replace
+    cfg = replace(smoke_variant(get("qwen3-8b")), name="qwen3-20m",
+                  d_model=768, n_heads=8, n_kv_heads=4, head_dim=96,
+                  d_ff=2048, vocab_size=8192, n_layers=4)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    # give the weights the paper's trained-weight statistics (alpha-stable),
+    # then cast to fp8 — the checkpoint the paper would compress
+    def trained_like(path, x):
+        if hasattr(x, "ndim") and x.ndim >= 2:
+            bits = stats.synthesize_fp8_weights(
+                x.shape, alpha=1.9, seed=abs(hash(str(path))) % 2**31)
+            return jnp.asarray(bits).view(jnp.float8_e4m3fn)
+        return x
+    params = jax.tree_util.tree_map_with_path(trained_like, params)
+
+    raw_dir = tempfile.mkdtemp(prefix="ckpt_raw_")
+    ecf_dir = tempfile.mkdtemp(prefix="ckpt_ecf8_")
+    save_tree(params, raw_dir, step=0, compress="none")
+    save_tree(params, ecf_dir, step=0, compress="ecf8")
+    rb, eb = dir_bytes(raw_dir), dir_bytes(ecf_dir)
+    print(f"raw fp8 checkpoint : {rb / 1e6:.2f} MB")
+    print(f"ECF8 checkpoint    : {eb / 1e6:.2f} MB "
+          f"(savings {100 * (1 - eb / rb):.1f}%)")
+
+    restored, step = restore_tree(ecf_dir, params)
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_flatten_with_path(restored)[0]):
+        np.testing.assert_array_equal(
+            np.asarray(a).view(np.uint8), np.asarray(b).view(np.uint8))
+    print("restore is bit-exact ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .hlo_parse import collective_bytes  # noqa: F401
+from .roofline import roofline_terms, HW  # noqa: F401

@@ -1,0 +1,555 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``HloCostAnalysis`` (what ``compiled.cost_analysis()`` reports) counts
+every ``while`` body **once**, regardless of trip count.  Our models stack
+layers with ``lax.scan`` and chunk attention with ``lax.map``/``fori_loop``,
+all of which lower to ``while`` — so the reported FLOPs/bytes/collectives
+undercount by the loop trip counts (52x for a 52-layer scan), which would
+poison every roofline term.
+
+This module re-derives costs from the post-optimization HLO text:
+
+  1. parse the module into computations and instructions;
+  2. cost each instruction (dot FLOPs from ``dot_dimension_numbers`` +
+     operand shapes; fusion = its computation's internal FLOPs, call-site
+     bytes; elementwise ~ 1 flop/elem);
+  3. recover each while loop's static trip count from its condition
+     computation (``compare(counter, constant(N)), direction=LT`` — the
+     jax scan/fori pattern);
+  4. fold costs over the call graph, scaling while bodies by trip count
+     (nested loops multiply), and scaling collective wire bytes the same
+     way.
+
+Validated against hand-computable jitted programs in tests/test_hlo_cost.py
+(e.g. a scanned matmul: trips x 2MNK) and cross-checked against
+MODEL_FLOPS=6ND per arch in the dry-run (useful ratio must be <= 1).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from functools import lru_cache
+
+from .hlo_parse import _DTYPE_BYTES, _FACTOR, _OPS
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_ATTR_COMP_RE = {
+    "body": re.compile(r"body=%?([\w.\-]+)"),
+    "condition": re.compile(r"condition=%?([\w.\-]+)"),
+    "calls": re.compile(r"calls=%?([\w.\-]+)"),
+    "to_apply": re.compile(r"to_apply=%?([\w.\-]+)"),
+    "branches": re.compile(r"branch_computations=\{([^}]*)\}"),
+}
+_DIMS_RE = {
+    "lhs_c": re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}"),
+    "lhs_b": re.compile(r"lhs_batch_dims=\{([0-9,]*)\}"),
+}
+
+_ELEMENTWISE_1FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "tanh", "log",
+    "log-plus-one", "rsqrt", "sqrt", "power", "cosine", "sine", "logistic",
+    "atan2", "cbrt", "erf", "round-nearest-afz", "round-nearest-even",
+    "floor", "ceil", "remainder", "clamp", "select", "compare",
+}
+_ZERO_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+@dataclass
+class Instr:
+    name: str
+    shape_str: str
+    opcode: str
+    rest: str                 # everything after the opening paren
+    operands: list = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: dict = field(default_factory=dict)
+    order: list = field(default_factory=list)
+    is_entry: bool = False
+
+    def root(self):
+        return self.instrs.get(self._root_name) if hasattr(
+            self, "_root_name") else None
+
+
+def _shape_elems(shape_str: str):
+    """[(dtype, n_elems, bytes), ...] for every array in the shape string."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((dt, n, n * _DTYPE_BYTES[dt]))
+    return out
+
+
+def _total_bytes(shape_str: str) -> int:
+    return sum(b for _, _, b in _shape_elems(shape_str))
+
+
+def _total_elems(shape_str: str) -> int:
+    return sum(n for _, n, _ in _shape_elems(shape_str))
+
+
+def parse_module(text: str) -> dict:
+    """HLO text -> {computation_name: Computation}."""
+    comps: dict = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if stripped.endswith("{") and "->" in stripped:
+            m = _COMP_HDR_RE.match(stripped)
+            if m:
+                cur = Computation(name=m.group(2), is_entry=bool(m.group(1)))
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        is_root, name, shape_str, opcode, rest = im.groups()
+        # operand names: %refs inside the call parens (up to the matching
+        # close — approximated by cutting at '), ' attr boundary)
+        call_part = rest.split("), ")[0]
+        operands = _OPERAND_RE.findall(call_part)
+        inst = Instr(name=name, shape_str=shape_str, opcode=opcode,
+                     rest=rest, operands=operands)
+        cur.instrs[name] = inst
+        cur.order.append(name)
+        if is_root:
+            cur._root_name = name
+    return comps
+
+
+def _attr_comps(inst: Instr) -> dict:
+    out = {}
+    for key, rx in _ATTR_COMP_RE.items():
+        m = rx.search(inst.rest)
+        if m:
+            if key == "branches":
+                out[key] = _OPERAND_RE.findall(m.group(1))
+            else:
+                out[key] = m.group(1)
+    return out
+
+
+def _const_value(inst: Instr | None) -> int | None:
+    if inst is None or inst.opcode != "constant":
+        return None
+    m = re.search(r"^(-?\d+)\)", inst.rest)
+    return int(m.group(1)) if m else None
+
+
+def _trip_count(cond: Computation, comps: dict) -> int | None:
+    """Static trip count from a jax-style loop condition computation.
+
+    Handles both a direct ``compare(i, constant(N)), direction=LT`` root
+    and the post-fusion form where the compare is wrapped in a kLoop fusion
+    and the constant is a call-site operand."""
+    root_name = getattr(cond, "_root_name", None)
+    if root_name is None:
+        return None
+    r = cond.instrs[root_name]
+    cand = None
+    if r.opcode == "compare" and "direction=LT" in r.rest:
+        cand = cond.instrs.get(r.operands[-1])
+    elif r.opcode == "fusion":
+        inner = comps.get(_attr_comps(r).get("calls", ""))
+        iroot_name = getattr(inner, "_root_name", None) if inner else None
+        if iroot_name is None:
+            return None
+        iroot = inner.instrs[iroot_name]
+        if iroot.opcode != "compare" or "direction=LT" not in iroot.rest:
+            return None
+        second = inner.instrs.get(iroot.operands[-1])
+        if second is None or second.opcode != "parameter":
+            return None
+        m = re.search(r"^(\d+)\)", second.rest)
+        if m is None or int(m.group(1)) >= len(r.operands):
+            return None
+        cand = cond.instrs.get(r.operands[int(m.group(1))])
+    v = _const_value(cand)
+    return max(v, 0) if v is not None else None
+
+
+def _dot_flops(inst: Instr, comp: Computation) -> float:
+    out_elems = _total_elems(inst.shape_str)
+    mc = _DIMS_RE["lhs_c"].search(inst.rest)
+    contract = 1
+    if mc and inst.operands:
+        lhs = comp.instrs.get(inst.operands[0])
+        if lhs is not None:
+            dims_m = _SHAPE_RE.search(lhs.shape_str)
+            if dims_m:
+                lhs_dims = [int(d) for d in dims_m.group(2).split(",") if d]
+                for i in (int(x) for x in mc.group(1).split(",") if x):
+                    if i < len(lhs_dims):
+                        contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+class HloCost:
+    """Folds instruction costs over the call graph with loop scaling.
+
+    ``vmem_tiles``: optional {"qcs": {int, ...}, "kc": int} — shapes that
+    pair a q-tile dim with the kv-chunk dim (the flash-attention s/p tiles
+    and their row statistics) are counted as VMEM-resident: zero HBM bytes,
+    full FLOPs.  Used for the Pallas-flash-kernel-adjusted roofline
+    (kernels/flash_fwd.py; EXPERIMENTS.md §Perf)."""
+
+    def __init__(self, text: str, vmem_tiles: dict | None = None):
+        self.comps = parse_module(text)
+        self.entry = next((c for c in self.comps.values() if c.is_entry),
+                          None)
+        self.unknown_trip_loops = 0
+        self.vmem_tiles = vmem_tiles
+        self.vmem_dropped_bytes = 0.0
+        self._memo: dict = {}
+
+    def _is_vmem_tile(self, shape_str: str) -> bool:
+        if not self.vmem_tiles:
+            return False
+        dims: list = []
+        for _, d_str in _SHAPE_RE.findall(shape_str):
+            dims += [int(d) for d in d_str.split(",") if d]
+        qcs, kc = self.vmem_tiles["qcs"], self.vmem_tiles["kc"]
+        has_q = any(d in qcs for d in dims)
+        if has_q and kc in dims:
+            return True
+        if has_q and dims and dims[-1] == 32:   # row-stat reduce windows
+            return True
+        return False
+
+    # -- per-instruction costs -------------------------------------------
+
+    def _instr_cost(self, inst: Instr, comp: Computation,
+                    inside_fusion: bool) -> dict:
+        flops = 0.0
+        bytes_ = 0.0
+        coll = {}
+        op = inst.opcode
+        if op == "dot":
+            flops = _dot_flops(inst, comp)
+        elif op in _ELEMENTWISE_1FLOP:
+            flops = float(_total_elems(inst.shape_str))
+        elif op == "reduce":
+            # ~1 flop per input element
+            for name in inst.operands[: max(1, len(inst.operands) // 2)]:
+                src = comp.instrs.get(name)
+                if src is not None:
+                    flops += _total_elems(src.shape_str)
+        elif op == "convolution":
+            # generic fallback: 2 * out_elems * (in_feature window) — rare
+            flops = 2.0 * _total_elems(inst.shape_str)
+
+        base = op.replace("-start", "")
+        if base in _OPS and not op.endswith("-done"):
+            largest = op.endswith("-start")
+            parts = _shape_elems(inst.shape_str)
+            if parts:
+                b = (max(p[2] for p in parts) if largest
+                     else sum(p[2] for p in parts))
+                b *= self._storage_dtype_ratio(inst, comp)
+                coll[base] = b * _FACTOR[base]
+
+        if not inside_fusion and op not in _ZERO_BYTES_OPS:
+            if self._is_vmem_tile(inst.shape_str):
+                self.vmem_dropped_bytes += self._instr_bytes(inst, comp)
+            else:
+                bytes_ = self._instr_bytes(inst, comp)
+        return {"flops": flops, "bytes": bytes_, "coll": coll}
+
+    def _instr_bytes(self, inst: Instr, comp: Computation) -> float:
+        """HBM bytes touched by one instruction (slice-aware, like XLA's
+        HloCostAnalysis: sliced/scattered ops charge the moved bytes, not
+        the full buffer operand)."""
+        op = inst.opcode
+        out_b = float(_total_bytes(inst.shape_str))
+        if op in ("dynamic-slice", "gather", "slice"):
+            return 2.0 * out_b                       # read slice + write
+        if op == "dynamic-update-slice":
+            upd = (comp.instrs.get(inst.operands[1])
+                   if len(inst.operands) > 1 else None)
+            ub = _total_bytes(upd.shape_str) if upd else out_b
+            return 2.0 * ub                          # read update + write
+        if op == "scatter":
+            upd = (comp.instrs.get(inst.operands[-1])
+                   if inst.operands else None)
+            ub = _total_bytes(upd.shape_str) if upd else out_b
+            idx = (comp.instrs.get(inst.operands[1])
+                   if len(inst.operands) > 2 else None)
+            ib = _total_bytes(idx.shape_str) if idx else 0
+            return 3.0 * ub + ib                     # read+write+dest read
+        b = out_b
+        for name in inst.operands:
+            src = comp.instrs.get(name)
+            if src is not None:
+                b += _total_bytes(src.shape_str)
+        return b
+
+    _TRANSPARENT = ("bitcast", "copy", "convert", "reshape", "transpose")
+
+    def _storage_dtype_ratio(self, inst: Instr, comp: Computation) -> float:
+        """XLA:CPU promotes bf16 compute to f32 (no native bf16 ALUs), so
+        collectives on widened operands appear at f32 in the CPU-lowered
+        dry-run HLO; on the TPU target the wire would carry the storage
+        dtype.  When a collective's operand is a convert (or a fusion whose
+        computation converts) from a narrower dtype, count the wire at the
+        narrower width.  Recorded as a hardware-adaptation assumption in
+        DESIGN.md."""
+        if not inst.operands:
+            return 1.0
+        src = comp.instrs.get(inst.operands[0])
+        if src is None:
+            return 1.0
+        out_parts = _shape_elems(inst.shape_str)
+        if not out_parts:
+            return 1.0
+        out_bytes_per = _DTYPE_BYTES.get(out_parts[0][0], 4)
+
+        def narrowest_convert(instr, cmp) -> int | None:
+            if instr.opcode == "convert":
+                op0 = cmp.instrs.get(instr.operands[0]) if instr.operands \
+                    else None
+                if op0 is not None:
+                    p = _shape_elems(op0.shape_str)
+                    if p:
+                        return _DTYPE_BYTES.get(p[0][0], 4)
+                # operand may be a computation parameter: parse the convert
+                # input dtype from the instruction's own rest (unavailable)
+                return None
+            if instr.opcode == "fusion":
+                inner = self.comps.get(_attr_comps(instr).get("calls", ""))
+                if inner is not None:
+                    widths = []
+                    for n in inner.order:
+                        ii = inner.instrs[n]
+                        if ii.opcode == "convert":
+                            p = _shape_elems(ii.shape_str)
+                            src_p = (
+                                _shape_elems(
+                                    inner.instrs[ii.operands[0]].shape_str)
+                                if ii.operands and ii.operands[0]
+                                in inner.instrs else [])
+                            for q in src_p:
+                                widths.append(_DTYPE_BYTES.get(q[0], 4))
+                    if widths:
+                        return min(widths)
+            return None
+
+        w = narrowest_convert(src, comp)
+        if w is not None and w < out_bytes_per:
+            return w / out_bytes_per
+        return 1.0
+
+    def _uses_map(self, comp: Computation) -> dict:
+        if not hasattr(comp, "_uses"):
+            uses: dict = {}
+            for iname in comp.order:
+                for op in comp.instrs[iname].operands:
+                    uses.setdefault(op, []).append(iname)
+            comp._uses = uses
+        return comp._uses
+
+    def _param_read_bytes(self, inner: Computation, pname: str,
+                          full: float) -> float:
+        """Bytes actually read from one fusion parameter, following the
+        dataflow through transparent ops: slicing consumers charge their
+        slice, a DUS consuming it as the in-place buffer charges nothing,
+        anything else charges the full operand."""
+        uses_map = self._uses_map(inner)
+        frontier = [pname]
+        seen = set()
+        charged = 0.0
+        while frontier:
+            nm = frontier.pop()
+            for uname in uses_map.get(nm, ()):
+                if uname in seen:
+                    continue
+                seen.add(uname)
+                u = inner.instrs[uname]
+                if u.opcode in ("dynamic-slice", "slice", "gather"):
+                    charged += _total_bytes(u.shape_str)
+                elif u.opcode == "dynamic-update-slice" and \
+                        u.operands and u.operands[0] == nm:
+                    pass  # in-place destination: not read
+                elif u.opcode in self._TRANSPARENT:
+                    frontier.append(uname)
+                else:
+                    return full
+        return charged
+
+    def _fusion_bytes(self, inst: Instr, comp: Computation,
+                      inner: Computation | None) -> float:
+        """Call-site bytes of a fusion, slice/update-aware: scan-over-layer
+        weight stacks consumed via dynamic-slice charge the slice; a fusion
+        rooted in dynamic-update-slice writes only the update (XLA aliases
+        the buffer in place)."""
+        out_b = float(_total_bytes(inst.shape_str))
+        if inner is None:
+            return out_b + sum(
+                _total_bytes(comp.instrs[n].shape_str)
+                for n in inst.operands if n in comp.instrs)
+        root_name = getattr(inner, "_root_name", None)
+        root = inner.instrs.get(root_name) if root_name else None
+        if root is not None and root.opcode == "dynamic-update-slice":
+            upd = (inner.instrs.get(root.operands[1])
+                   if len(root.operands) > 1 else None)
+            out_b = float(_total_bytes(upd.shape_str)) if upd else out_b
+
+        params = {}
+        for iname in inner.order:
+            ii = inner.instrs[iname]
+            if ii.opcode == "parameter":
+                m = re.search(r"^(\d+)\)", ii.rest)
+                if m:
+                    params[int(m.group(1))] = iname
+        total = out_b
+        for idx, op_name in enumerate(inst.operands):
+            src = comp.instrs.get(op_name)
+            full = float(_total_bytes(src.shape_str)) if src else 0.0
+            pname = params.get(idx)
+            if pname is None:
+                total += full
+            else:
+                total += self._param_read_bytes(inner, pname, full)
+        return total
+
+    # -- per-computation totals ------------------------------------------
+
+    def comp_cost(self, name: str, inside_fusion: bool = False) -> dict:
+        key = (name, inside_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        total = {"flops": 0.0, "bytes": 0.0, "coll": {}}
+        if comp is None:
+            return total
+
+        def add(dst, src, scale=1.0):
+            dst["flops"] += src["flops"] * scale
+            dst["bytes"] += src["bytes"] * scale
+            for k, v in src["coll"].items():
+                dst["coll"][k] = dst["coll"].get(k, 0.0) + v * scale
+
+        for iname in comp.order:
+            inst = comp.instrs[iname]
+            refs = _attr_comps(inst)
+            if inst.opcode == "while":
+                trip = None
+                if "condition" in refs:
+                    trip = _trip_count(
+                        self.comps.get(refs["condition"], Computation("")),
+                        self.comps)
+                if trip is None:
+                    trip = 1
+                    self.unknown_trip_loops += 1
+                body = self.comp_cost(refs.get("body", ""), False)
+                cond = self.comp_cost(refs.get("condition", ""), False)
+                add(total, body, trip)
+                add(total, cond, trip)
+            elif inst.opcode == "fusion":
+                inner = self.comp_cost(refs.get("calls", ""), True)
+                add(total, {"flops": inner["flops"], "bytes": 0.0,
+                            "coll": inner["coll"]})
+                if not inside_fusion:
+                    fb = self._fusion_bytes(
+                        inst, comp, self.comps.get(refs.get("calls", "")))
+                    if self._is_vmem_tile(inst.shape_str):
+                        self.vmem_dropped_bytes += fb
+                        fb = 0.0
+                    add(total, {"flops": 0.0, "coll": {}, "bytes": fb})
+            elif inst.opcode == "conditional":
+                branches = refs.get("branches", [])
+                if branches:
+                    costs = [self.comp_cost(b, inside_fusion)
+                             for b in branches]
+                    add(total, max(costs, key=lambda c: c["flops"]
+                                   + c["bytes"]))
+                add(total, self._instr_cost(inst, comp, inside_fusion))
+            elif inst.opcode in ("call", "custom-call", "async-start"):
+                callee = refs.get("to_apply") or refs.get("calls")
+                if callee:
+                    add(total, self.comp_cost(callee, inside_fusion))
+                add(total, self._instr_cost(inst, comp, inside_fusion))
+            elif inst.opcode in ("reduce", "sort", "map", "scatter",
+                                 "reduce-window", "select-and-scatter"):
+                # have applied computations; their cost ~ per-element,
+                # approximated by the instruction cost itself
+                add(total, self._instr_cost(inst, comp, inside_fusion))
+            else:
+                add(total, self._instr_cost(inst, comp, inside_fusion))
+        self._memo[key] = total
+        return total
+
+    def entry_cost(self) -> dict:
+        if self.entry is None:
+            return {"flops": 0.0, "bytes": 0.0, "coll": {}}
+        out = self.comp_cost(self.entry.name)
+        out = dict(out)
+        out["coll"] = dict(out["coll"])
+        out["coll"]["total"] = float(sum(out["coll"].values()))
+        out["unknown_trip_loops"] = self.unknown_trip_loops
+        return out
+
+
+def analyze(hlo_text: str, vmem_tiles: dict | None = None) -> dict:
+    """Trip-count-aware {flops, bytes, coll{...,total}} of the entry."""
+    hc = HloCost(hlo_text, vmem_tiles=vmem_tiles)
+    out = hc.entry_cost()
+    out["vmem_dropped_bytes"] = hc.vmem_dropped_bytes
+    return out
+
+
+def byte_histogram(hlo_text: str, top: int = 25) -> list:
+    """Top HBM-byte contributors [(scaled_bytes, trips, opcode, name,
+    shape)] — the §Perf profiling view of the compiled artifact."""
+    hc = HloCost(hlo_text)
+    hc.entry_cost()
+    rows: list = []
+
+    def walk(comp_name, scale):
+        comp = hc.comps.get(comp_name)
+        if comp is None:
+            return
+        for iname in comp.order:
+            inst = comp.instrs[iname]
+            refs = _attr_comps(inst)
+            if inst.opcode == "while":
+                trip = _trip_count(
+                    hc.comps.get(refs.get("condition", ""),
+                                 Computation("")), hc.comps) or 1
+                walk(refs.get("body", ""), scale * trip)
+            elif inst.opcode == "fusion":
+                b = hc._fusion_bytes(inst, comp,
+                                     hc.comps.get(refs.get("calls", "")))
+                rows.append((b * scale, scale, inst.opcode, iname,
+                             inst.shape_str[:70]))
+            elif inst.opcode not in _ZERO_BYTES_OPS:
+                rows.append((hc._instr_bytes(inst, comp) * scale, scale,
+                             inst.opcode, iname, inst.shape_str[:70]))
+
+    if hc.entry is not None:
+        walk(hc.entry.name, 1.0)
+    rows.sort(reverse=True)
+    return rows[:top]

@@ -1,0 +1,89 @@
+"""Parse collective traffic out of post-SPMD HLO text.
+
+``compiled.as_text()`` is the per-device (SPMD-partitioned) module, so the
+shapes on collective instructions are per-chip.  Wire-byte model per op
+(ring algorithms, (n-1)/n ~ 1):
+
+    all-gather          : output bytes          (each chip receives ~out)
+    reduce-scatter      : operand bytes         (each chip sends ~in)
+    all-reduce          : 2 x bytes             (reduce-scatter + all-gather)
+    all-to-all          : operand bytes
+    collective-permute  : operand bytes
+
+Async pairs (``-start``/``-done``) are counted once (on ``-start``).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "c64": 8, "c128": 16,
+}
+
+_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute")
+_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(.*?)\s+(" + "|".join(_OPS) + r")(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+
+
+def _shape_bytes(shape_str: str, largest_only: bool = False) -> int:
+    parts = []
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        parts.append(n * _DTYPE_BYTES[dt])
+    if not parts:
+        return 0
+    return max(parts) if largest_only else sum(parts)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-chip collective wire bytes by op kind, from post-SPMD HLO text.
+
+    Returns {op: bytes, ..., "total": bytes, "count": n_ops,
+             "ops": [(op, bytes, group_size), ...]}.
+    """
+    by_op: dict = defaultdict(float)
+    ops = []
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        # async `-start` ops have tuple shapes (operand, result): count the
+        # largest component only (the gathered/reduced result)
+        raw = _shape_bytes(shape_str, largest_only=m.group(3) is not None)
+        g = _GROUPS_RE.search(line)
+        group_size = len(g.group(1).split(",")) if g else 0
+        eff = raw * _FACTOR[op]
+        by_op[op] += eff
+        ops.append((op, eff, group_size))
+    out = dict(by_op)
+    out["total"] = float(sum(by_op.values()))
+    out["count"] = len(ops)
+    out["ops"] = ops
+    return out
+
+
+def op_histogram(hlo_text: str, kinds=("fusion", "dot", "scatter", "gather",
+                                       "transpose", "reshape", "copy")) -> dict:
+    """Rough instruction histogram of the optimized module (perf forensics)."""
+    hist: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        for k in kinds + _OPS:
+            if f" {k}(" in line or f" {k}-start(" in line:
+                hist[k] += 1
+                break
+    return dict(hist)

@@ -1,0 +1,103 @@
+"""Roofline terms from the compiled dry-run artifact (no real hardware).
+
+Hardware constants: TPU v5e class chip —
+    peak compute  197 TFLOP/s (bf16)
+    HBM bandwidth 819 GB/s
+    ICI           ~50 GB/s per link (we budget one link's worth per chip for
+                  the dominant ring; a real v5e has 4; this is conservative
+                  and recorded as an assumption)
+
+Terms per (arch x shape x mesh), all in seconds-per-step:
+
+    compute    = HLO_FLOPs_per_chip / peak
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_wire_bytes_per_chip / ICI_bw
+
+``cost_analysis()`` of the SPMD-partitioned executable reports per-device
+flops/bytes; collective bytes come from ``analysis.hlo_parse`` over the
+post-optimization HLO (also per-device).  MODEL_FLOPS = 6*N*D (dense) or
+6*N_active*D (MoE), D = tokens processed per step; the ratio
+MODEL_FLOPS / HLO_FLOPs_total shows how much compiled compute is "useful"
+(catches remat recompute and redundancy; >1 is impossible, ~0.33 under full
+remat is expected for training: fwd+bwd+rematerialized fwd).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    ici_bw: float = 50e9              # bytes/s per chip (one link budget)
+
+
+DEFAULT_HW = HW()
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """6*N*D useful-FLOPs estimate (N = active params, D = tokens/step).
+
+    train counts fwd+bwd (6ND); prefill counts fwd only (2ND); decode steps
+    process batch*1 tokens (2ND per generated token)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n * toks
+    toks = shape.global_batch * 1
+    return 2.0 * n * toks
+
+
+def roofline_terms(cost: dict, coll: dict, n_chips: int,
+                   cfg: ArchConfig = None, shape: ShapeConfig = None,
+                   hw: HW = DEFAULT_HW) -> dict:
+    """Three roofline terms (+ diagnostics) from dry-run artifacts.
+
+    ``cost``: compiled.cost_analysis() dict (per-chip).
+    ``coll``: hlo_parse.collective_bytes() dict (per-chip).
+    """
+    flops_chip = float(cost.get("flops", 0.0))
+    bytes_chip = float(cost.get("bytes accessed", 0.0))
+    coll_chip = float(coll.get("total", 0.0))
+
+    t_compute = flops_chip / hw.peak_flops
+    t_memory = bytes_chip / hw.hbm_bw
+    t_coll = coll_chip / hw.ici_bw
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    out = {
+        **{f"t_{k}": v for k, v in terms.items()},
+        "dominant": dominant,
+        "flops_per_chip": flops_chip,
+        "bytes_per_chip": bytes_chip,
+        "collective_bytes_per_chip": coll_chip,
+        "hlo_flops_total": flops_chip * n_chips,
+        "n_chips": n_chips,
+    }
+    if cfg is not None and shape is not None:
+        mf = model_flops(cfg, shape)
+        out["model_flops"] = mf
+        out["useful_flops_ratio"] = (
+            mf / max(flops_chip * n_chips, 1.0))
+        # roofline fraction: useful work over what the bound permits in the
+        # dominated time (how close the step is to its own roofline)
+        step_time = max(terms.values())
+        out["step_time_bound"] = step_time
+        out["mfu_bound"] = mf / (n_chips * hw.peak_flops * step_time) \
+            if step_time > 0 else 0.0
+    return out
+
+
+def fmt_seconds(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.2f}ms"
+    return f"{s * 1e6:.1f}us"

@@ -1,0 +1,251 @@
+"""Fault-tolerant checkpointing: atomic, checksummed, async, elastic.
+
+Properties (the fault-tolerance contract, exercised by tests):
+
+  * **Atomic**: a checkpoint is written into ``<dir>.tmp`` and ``os.rename``d
+    into place; the manifest is written *last* inside the tmp dir, so a
+    visible ``step_XXXXXXXX`` directory with a manifest is complete by
+    construction.  A crash mid-write leaves only a ``.tmp`` that restore
+    ignores and the next save garbage-collects.
+  * **Checksummed**: every array's crc32 is in the manifest; ``restore``
+    verifies and falls back to the previous checkpoint on corruption.
+  * **Async**: ``save_async`` snapshots arrays to host memory synchronously
+    (so training can mutate buffers immediately) and writes on a background
+    thread — the training loop never blocks on the filesystem.
+  * **Elastic / mesh-agnostic**: arrays are stored host-shaped (full logical
+    shape).  ``restore`` re-shards onto whatever mesh/sharding the caller
+    passes — restart on a different pod count or topology works by
+    construction (tested: save on one mesh, restore onto another).
+  * **ECF8-compressed** (the paper's technique on the fault-tolerance path):
+    fp8 leaves are entropy-coded with the ECF8-TPU container at write time
+    and decoded bit-exactly at restore (``compress="ecf8"``), cutting
+    checkpoint bytes by the weight-compression ratio and therefore restart
+    time — useful at scale where restore bandwidth gates MTTR.
+
+Layout:
+    <root>/step_00000042/
+        manifest.json      {step, leaves: {path: {file, crc32, shape, ...}}}
+        arrays.npz         raw leaves
+        ecf8_<i>.npz       compressed fp8 leaves (one file per leaf)
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import zlib
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import fp8, tpu_format
+
+_SEP = "\x1e"  # path separator in flattened keys (never appears in names)
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def _host(x):
+    """Fetch a (possibly sharded) jax.Array fully to host memory."""
+    if isinstance(x, jax.Array):
+        x = jax.device_get(x)
+    return np.asarray(x)
+
+
+def _crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).view(np.uint8).tobytes())
+
+
+def save_tree(tree, directory: str, step: int, compress: str = "none"):
+    """Synchronous atomic checkpoint write.  compress: none|ecf8."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    flat, _ = _flatten(tree)
+    manifest = {"step": step, "compress": compress, "leaves": {}}
+    raw = {}
+    for i, (key, leaf) in enumerate(sorted(flat.items())):
+        a = _host(leaf)
+        entry = {"shape": list(a.shape), "dtype": str(a.dtype),
+                 "crc32": _crc(a)}
+        if compress == "ecf8" and a.dtype == np.dtype(jnp.float8_e4m3fn):
+            c = tpu_format.encode(a.view(np.uint8))
+            fn = f"ecf8_{i}.npz"
+            np.savez(os.path.join(tmp, fn), payload=c.payload,
+                     signmant=c.signmant, lj_limit=c.lj_limit,
+                     first_lj=c.first_lj, offset=c.offset, perm=c.perm,
+                     lengths=c.lengths,
+                     meta=np.asarray([c.n_elem, c.sym_per_lane]))
+            entry.update(format="ecf8", file=fn)
+        else:
+            # npz stores by name; float8 views as uint8 for portability
+            if a.dtype == np.dtype(jnp.float8_e4m3fn):
+                raw[key] = a.view(np.uint8)
+                entry["stored_as"] = "uint8_bits"
+            else:
+                raw[key] = a
+            entry.update(format="raw", file="arrays.npz")
+        manifest["leaves"][key] = entry
+    np.savez(os.path.join(tmp, "arrays.npz"), **raw)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def _load_dir(path: str, template_tree, shardings=None, verify: bool = True):
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_t, treedef = _flatten(template_tree)
+    npz = np.load(os.path.join(path, "arrays.npz"))
+    out = {}
+    for key, leaf in flat_t.items():
+        entry = manifest["leaves"][key]
+        want_dtype = entry["dtype"]
+        if entry["format"] == "ecf8":
+            z = np.load(os.path.join(path, entry["file"]))
+            n_elem, spl = (int(v) for v in z["meta"])
+            c = tpu_format.TpuECF8(
+                payload=z["payload"], payload_ragged=np.zeros(0, np.uint8),
+                chunk_offsets=np.zeros(1, np.int32),
+                chunk_strides=np.zeros(0, np.int32),
+                signmant=z["signmant"], lj_limit=z["lj_limit"],
+                first_lj=z["first_lj"], offset=z["offset"], perm=z["perm"],
+                lengths=z["lengths"], n_elem=n_elem,
+                shape=tuple(entry["shape"]), sym_per_lane=spl)
+            bits = np.asarray(tpu_format.decode_jnp(c))
+            a = bits.view(jnp.float8_e4m3fn).reshape(c.shape)
+        else:
+            a = npz[key]
+            if entry.get("stored_as") == "uint8_bits":
+                a = a.view(jnp.float8_e4m3fn)
+        if verify and _crc(a) != entry["crc32"]:
+            raise IOError(f"checksum mismatch for {key} in {path}")
+        a = a.reshape(entry["shape"])
+        out[key] = a
+    # rebuild in the template's flatten order (keys are unique paths)
+    if shardings is not None:
+        flat_s, _ = _flatten(shardings)
+        leaves = [jax.device_put(out[k], flat_s[k]) if k in flat_s
+                  else jnp.asarray(out[k]) for k in flat_t]
+    else:
+        leaves = [out[k] for k in flat_t]
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, manifest["step"]
+
+
+def restore_tree(directory: str, template_tree, shardings=None,
+                 step: int | None = None, verify: bool = True):
+    """Restore the latest (or given) valid checkpoint.
+
+    ``shardings``: optional pytree of NamedSharding — arrays are placed
+    directly onto the (possibly different) target mesh (elastic restore).
+    Returns (tree, step) or (None, -1) when nothing restorable exists.
+    """
+    steps = available_steps(directory)
+    if step is not None:
+        steps = [s for s in steps if s == step]
+    for s in sorted(steps, reverse=True):
+        path = os.path.join(directory, f"step_{s:08d}")
+        try:
+            return _load_dir(path, template_tree, shardings, verify=verify)
+        except Exception as e:  # corrupt -> try older
+            print(f"[checkpoint] skipping {path}: {e}")
+    return None, -1
+
+
+def available_steps(directory: str) -> list:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp") and \
+                os.path.exists(os.path.join(directory, name,
+                                            "manifest.json")):
+            out.append(int(name[5:]))
+    return sorted(out)
+
+
+@dataclass
+class CheckpointManager:
+    """Async checkpoint manager with retention and auto-resume."""
+
+    directory: str
+    keep: int = 3
+    compress: str = "none"
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._q: queue.Queue = queue.Queue()
+        self._errors: list = []
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            step, host_tree = item
+            try:
+                save_tree(host_tree, self.directory, step,
+                          compress=self.compress)
+                self._gc()
+            except Exception as e:  # surfaced via .errors
+                self._errors.append((step, repr(e)))
+            finally:
+                self._q.task_done()
+
+    def _gc(self):
+        steps = available_steps(self.directory)
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+        # stale tmp dirs from crashes
+        for name in os.listdir(self.directory):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.directory, name),
+                              ignore_errors=True)
+
+    def save_async(self, step: int, tree):
+        """Snapshot to host now; write on the background thread."""
+        host_tree = jax.tree_util.tree_map(_host, tree)
+        self._q.put((step, host_tree))
+
+    def save_sync(self, step: int, tree):
+        host_tree = jax.tree_util.tree_map(_host, tree)
+        save_tree(host_tree, self.directory, step, compress=self.compress)
+        self._gc()
+
+    def wait(self):
+        self._q.join()
+        if self._errors:
+            errs, self._errors = self._errors, []
+            raise IOError(f"async checkpoint writes failed: {errs}")
+
+    def restore(self, template_tree, shardings=None):
+        self.wait()
+        return restore_tree(self.directory, template_tree, shardings)
+
+    def close(self):
+        self._q.put(None)
+        self._q.join()

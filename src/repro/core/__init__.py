@@ -1,0 +1,11 @@
+"""ECF8 core: exponent-concentration theory and lossless fp8 compression."""
+from . import fp8, theory, stats, huffman, paper_format, tpu_format, fixedrate, store  # noqa: F401
+from .store import (  # noqa: F401
+    CompressedTensor,
+    compress_array,
+    compress_stacked,
+    compress_tree,
+    fp8_cast_tree,
+    is_compressed,
+    materialize,
+)

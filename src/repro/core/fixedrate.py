@@ -1,0 +1,176 @@
+"""ECF8-FR: fixed-rate 2-bit exponent codes with escapes (beyond-paper).
+
+Exponent concentration (paper §2) means the top-3 exponent values typically
+cover 80–95 % of the mass.  ECF8-FR assigns a 2-bit code per element:
+codes 0..2 index a per-tensor 3-entry exponent table, code 3 escapes to a
+side array of raw 4-bit exponents stored in element order.
+
+Unlike Huffman, *both* encode and decode are O(1) static-shape vector ops —
+no bitstream, no data-dependent shapes.  This makes ECF8-FR usable:
+
+  * inside jitted graphs at near-zero cost (serving decode-on-use),
+  * inside collectives (compressed weight all-gather, `runtime/collectives`),
+  * for on-device compression (checkpoint write path).
+
+Rate: 2 + 4·p_escape bits/exponent (+4 sign/mantissa) vs the entropy H(E);
+near-optimal precisely when exponents concentrate — the paper's own law.
+
+Escape capacity is static per tensor: exact for frozen weights (serving,
+checkpoints); for training-time collectives a safety margin is applied and
+an overflow flag is surfaced (see DESIGN.md — recalibration trigger).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import fp8
+
+TABLE_SIZE = 3  # 2-bit codes: 3 table entries + 1 escape
+
+
+@dataclass
+class FixedRateECF8:
+    """ECF8-FR compressed tensor (host-side numpy arrays)."""
+
+    codes: np.ndarray      # (ceil(N/4),) uint8, four 2-bit codes per byte
+    escapes: np.ndarray    # (ceil(cap/2),) uint8 nibble-packed raw exponents
+    table: np.ndarray      # (3,) uint8 top-3 exponent values
+    signmant: np.ndarray   # (ceil(N/2),) uint8 nibble-packed
+    n_elem: int
+    esc_capacity: int
+    esc_count: int
+    shape: tuple
+
+    @property
+    def nbytes(self) -> int:
+        return (self.codes.nbytes + self.escapes.nbytes + self.table.nbytes
+                + self.signmant.nbytes)
+
+    @property
+    def ratio(self) -> float:
+        return self.nbytes / max(self.n_elem, 1)
+
+
+def encode(weight_bits: np.ndarray, esc_capacity: int | None = None,
+           margin: float = 1.0) -> FixedRateECF8:
+    """Compress an fp8 tensor (uint8 bit view) into ECF8-FR (numpy)."""
+    orig_shape = tuple(weight_bits.shape)
+    flat = np.asarray(weight_bits, dtype=np.uint8).reshape(-1)
+    n = flat.shape[0]
+    exps = fp8.exponent_field(flat, xp=np)
+    signmant = fp8.signmant_nibble(flat, xp=np)
+
+    freqs = np.bincount(exps, minlength=16)
+    table = np.argsort(-freqs, kind="stable")[:TABLE_SIZE].astype(np.uint8)
+
+    code = np.full(n, 3, dtype=np.uint8)
+    for i, t in enumerate(table):
+        code[exps == t] = i
+    esc_mask = code == 3
+    esc_vals = exps[esc_mask]
+    count = int(esc_vals.shape[0])
+    cap = count if esc_capacity is None else int(esc_capacity)
+    cap = max(int(np.ceil(cap * margin)), count, 1)
+
+    esc_store = np.zeros(cap, dtype=np.uint8)
+    esc_store[:count] = esc_vals
+
+    # pack four 2-bit codes per byte (element 4i -> bits 7..6)
+    n4 = -(-n // 4) * 4
+    code_p = np.zeros(n4, dtype=np.uint8)
+    code_p[:n] = code
+    quads = code_p.reshape(-1, 4)
+    codes = (quads[:, 0] << 6) | (quads[:, 1] << 4) | (quads[:, 2] << 2) | quads[:, 3]
+
+    return FixedRateECF8(
+        codes=codes.astype(np.uint8),
+        escapes=fp8.pack_nibbles(esc_store, xp=np),
+        table=table,
+        signmant=fp8.pack_nibbles(signmant, xp=np),
+        n_elem=n, esc_capacity=cap, esc_count=count, shape=orig_shape,
+    )
+
+
+def _unpack_codes(codes, n, xp=jnp):
+    c = codes[:, None] if False else codes
+    parts = xp.stack(
+        [(c >> 6) & 3, (c >> 4) & 3, (c >> 2) & 3, c & 3], axis=-1
+    ).reshape(-1)
+    return parts[:n]
+
+
+@partial(jax.jit, static_argnames=("n_elem",))
+def _decode_jnp_impl(codes, escapes, table, signmant, n_elem: int):
+    code = _unpack_codes(codes.astype(jnp.uint8), n_elem, xp=jnp)
+    is_esc = code == 3
+    # rank of each escape in element order
+    esc_rank = jnp.cumsum(is_esc.astype(jnp.int32)) - 1
+    esc_vals = fp8.unpack_nibbles(escapes, escapes.shape[0] * 2, xp=jnp)
+    esc_e = jnp.take(esc_vals, jnp.clip(esc_rank, 0, esc_vals.shape[0] - 1))
+    tab_e = jnp.take(table.astype(jnp.uint8), jnp.minimum(code, 2))
+    exps = jnp.where(is_esc, esc_e, tab_e)
+    sm = fp8.unpack_nibbles(signmant, n_elem, xp=jnp)
+    return fp8.assemble(exps, sm, xp=jnp)
+
+
+def decode_jnp(c: FixedRateECF8) -> jnp.ndarray:
+    """In-graph decode -> uint8 fp8 bits (n_elem,)."""
+    return _decode_jnp_impl(
+        jnp.asarray(c.codes), jnp.asarray(c.escapes), jnp.asarray(c.table),
+        jnp.asarray(c.signmant), n_elem=c.n_elem,
+    )
+
+
+def decode_ref(c: FixedRateECF8) -> np.ndarray:
+    """Numpy oracle decode -> original uint8 fp8 bit view."""
+    code = np.asarray(_unpack_codes(c.codes, c.n_elem, xp=np))
+    esc_vals = np.asarray(fp8.unpack_nibbles(c.escapes, c.escapes.shape[0] * 2,
+                                             xp=np))
+    is_esc = code == 3
+    esc_rank = np.cumsum(is_esc) - 1
+    exps = np.where(
+        is_esc,
+        esc_vals[np.clip(esc_rank, 0, len(esc_vals) - 1)],
+        c.table[np.minimum(code, 2)],
+    ).astype(np.uint8)
+    sm = np.asarray(fp8.unpack_nibbles(c.signmant, c.n_elem, xp=np))
+    return fp8.assemble(exps, sm, xp=np).reshape(c.shape)
+
+
+@partial(jax.jit, static_argnames=("esc_capacity",))
+def encode_jnp(weight_bits: jnp.ndarray, table: jnp.ndarray,
+               esc_capacity: int):
+    """On-device ECF8-FR encode with a *fixed* table and escape capacity.
+
+    Returns (codes, escapes, overflowed) — all static shapes, so this can run
+    inside jit / shard_map (compressed collectives).  ``overflowed`` is True
+    iff the escape count exceeded capacity (the result is then invalid and
+    the caller must fall back / recalibrate — surfaced as a metric).
+    """
+    flat = weight_bits.reshape(-1)
+    n = flat.shape[0]
+    exps = fp8.exponent_field(flat, xp=jnp)
+    code = jnp.full((n,), 3, dtype=jnp.uint8)
+    for i in range(TABLE_SIZE):
+        code = jnp.where(exps == table[i], jnp.uint8(i), code)
+    is_esc = code == 3
+    count = is_esc.sum()
+    pos = jnp.cumsum(is_esc.astype(jnp.int32)) - 1
+    esc_store = jnp.zeros((esc_capacity,), dtype=jnp.uint8)
+    # out-of-bounds indices (non-escapes, overflow) are dropped entirely
+    esc_store = esc_store.at[jnp.where(is_esc, pos, esc_capacity)].set(
+        exps, mode="drop"
+    )
+
+    n4 = -(-n // 4) * 4
+    code_p = jnp.zeros((n4,), dtype=jnp.uint8).at[:n].set(code)
+    quads = code_p.reshape(-1, 4)
+    codes = ((quads[:, 0] << 6) | (quads[:, 1] << 4)
+             | (quads[:, 2] << 2) | quads[:, 3])
+    signmant = fp8.signmant_nibble(flat, xp=jnp)
+    return codes, esc_store, signmant, count > esc_capacity

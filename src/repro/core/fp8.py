@@ -1,0 +1,86 @@
+"""FP8 (float8_e4m3fn) bit-field utilities.
+
+Bit layout (IEEE-754-style, e4m3fn):  [s eeee mmm]
+  bit 7      : sign
+  bits 6..3  : 4-bit exponent field (biased by 7; field value 0 = subnormal)
+  bits 2..0  : 3-bit mantissa
+
+ECF8 splits each byte into the 4-bit exponent field (entropy-coded) and the
+4-bit sign+mantissa nibble ``q = (s << 3) | m`` (stored packed, two per byte).
+
+All functions work on the raw ``uint8`` bit view and are implemented for both
+numpy (offline encode path) and jax.numpy (in-graph decode path) via the
+``xp`` module argument.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+FP8_DTYPE = jnp.float8_e4m3fn
+
+EXP_BITS = 4
+MANT_BITS = 3
+EXP_BIAS = 7
+N_EXP_SYMBOLS = 1 << EXP_BITS  # 16
+
+
+def to_bits(x) -> "jnp.ndarray":
+    """View an fp8 array as raw uint8 bits (no copy semantics where possible)."""
+    if isinstance(x, np.ndarray):
+        return x.view(np.uint8)
+    return jnp.asarray(x).view(jnp.uint8)
+
+
+def from_bits(bits, xp=jnp):
+    """View raw uint8 bits as fp8 values."""
+    if xp is np:
+        return np.asarray(bits, dtype=np.uint8).view(jnp.float8_e4m3fn)
+    return jnp.asarray(bits, dtype=jnp.uint8).view(FP8_DTYPE)
+
+
+def exponent_field(bits, xp=jnp):
+    """Extract the 4-bit exponent field (values 0..15)."""
+    return (bits >> 3) & xp.uint8(0x0F)
+
+
+def signmant_nibble(bits, xp=jnp):
+    """Extract the 4-bit sign+mantissa nibble ``(s << 3) | m``."""
+    return ((bits >> 4) & xp.uint8(0x08)) | (bits & xp.uint8(0x07))
+
+
+def assemble(exp_field, signmant, xp=jnp):
+    """Rebuild the fp8 byte from a 4-bit exponent field and 4-bit s+m nibble."""
+    exp_field = exp_field.astype(xp.uint8)
+    signmant = signmant.astype(xp.uint8)
+    return (
+        ((signmant & xp.uint8(0x08)) << 4)
+        | ((exp_field & xp.uint8(0x0F)) << 3)
+        | (signmant & xp.uint8(0x07))
+    )
+
+
+def pack_nibbles(nibbles, xp=np):
+    """Pack 4-bit values two-per-byte (element 2i -> high nibble of byte i)."""
+    n = nibbles.shape[0]
+    padded = nibbles
+    if n % 2:
+        pad = xp.zeros((1,), dtype=xp.uint8)
+        padded = xp.concatenate([nibbles.astype(xp.uint8), pad])
+    pairs = padded.reshape(-1, 2)
+    return (pairs[:, 0] << 4) | (pairs[:, 1] & xp.uint8(0x0F))
+
+
+def unpack_nibbles(packed, n, xp=jnp):
+    """Inverse of :func:`pack_nibbles`; returns ``n`` 4-bit values."""
+    hi = (packed >> 4) & xp.uint8(0x0F)
+    lo = packed & xp.uint8(0x0F)
+    out = xp.stack([hi, lo], axis=-1).reshape(-1)
+    return out[:n]
+
+
+def cast_to_fp8(x, xp=jnp):
+    """Round-to-nearest cast of a float array to fp8 e4m3fn."""
+    if xp is np:
+        return np.asarray(jnp.asarray(x).astype(FP8_DTYPE))
+    return jnp.asarray(x).astype(FP8_DTYPE)

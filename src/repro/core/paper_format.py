@@ -1,0 +1,244 @@
+"""Faithful implementation of the paper's ECF8 container (§3.1, Algorithm 1).
+
+Layout (per tensor):
+  encoded : Huffman bitstream of the 4-bit exponents, MSB-first   (n_bytes,)
+  packed  : sign+mantissa nibbles, two per byte                   (ceil(N/2),)
+  LUT     : cascaded 8-bit decode subtables + final length table  (n_luts, 256)
+  gaps    : per-thread 4-bit bit offsets, two per byte
+  outpos  : per-block cumulative output positions (int64)
+
+Threads process ``B`` bytes each, ``T`` threads per block.  ``gaps[t]`` is the
+bit offset, within thread t's byte window, of the first codeword that *starts*
+in that window; ``outpos[b]`` is the number of symbols decoded by blocks
+``< b``.  Max code length is 16 bits, so a codeword spans at most 2 bytes of
+lookahead and gaps always fit 4 bits (paper §3.1).
+
+The decoder here is the numpy *oracle* used to validate the Pallas port
+(`kernels/paper_block_decode.py`) and the TPU-adapted format.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from . import fp8
+from .huffman import Codebook
+
+# Paper constants (Algorithm 1 uses B+2 = 10 lookahead bytes => B = 8).
+BYTES_PER_THREAD = 8
+THREADS_PER_BLOCK = 128
+MAX_CODE_LEN = 16
+LUT_POINTER_BASE = 240  # entries >= 240 are pointers; subtable = 256 - entry
+
+
+@dataclass
+class PaperECF8:
+    """The paper's compressed tensor container (host-side numpy arrays)."""
+
+    encoded: np.ndarray  # uint8 bitstream
+    packed: np.ndarray  # uint8 nibble-packed sign/mantissa
+    lut: np.ndarray  # (n_luts, 256) uint8 cascaded tables (+ length table last)
+    gaps: np.ndarray  # uint8, two 4-bit gaps per byte
+    outpos: np.ndarray  # int64 per-block output positions (n_blocks + 1)
+    n_elem: int
+    shape: tuple
+    codebook: Codebook
+
+    @property
+    def n_bytes_total(self) -> int:
+        """Total compressed footprint in bytes (all components)."""
+        return (
+            self.encoded.nbytes
+            + self.packed.nbytes
+            + self.lut.nbytes
+            + self.gaps.nbytes
+            + self.outpos.nbytes
+        )
+
+    @property
+    def ratio(self) -> float:
+        """Compressed bytes / original fp8 bytes (1 byte per element)."""
+        return self.n_bytes_total / max(self.n_elem, 1)
+
+
+def build_cascaded_lut(cb: Codebook) -> np.ndarray:
+    """Build the paper's cascaded 8-bit lookup tables.
+
+    Table 0 is the root.  Entry values:
+      < 16               : decoded symbol (complete code within this byte)
+      in [240, 255]      : pointer; subtable index = 256 - value
+    The *last* table is the length table: ``lut[-1, x] = len(code(x))``.
+    """
+    # byte-aligned proper prefixes of codes longer than 8 bits
+    prefixes: list[int] = []
+    for s in range(16):
+        l = int(cb.lengths[s])
+        if l > 8:
+            p = int(cb.codes[s]) >> (l - 8)
+            if p not in prefixes:
+                prefixes.append(p)
+    n_luts = 1 + len(prefixes) + 1  # root + subtables + length table
+    if len(prefixes) > 16:
+        raise ValueError("too many subtables for pointer encoding")
+    lut = np.zeros((n_luts, 256), dtype=np.uint8)
+
+    for b in range(256):
+        # find a code of length <= 8 that is a left-justified prefix of b
+        hit = False
+        for s in range(16):
+            l = int(cb.lengths[s])
+            if 0 < l <= 8 and (b >> (8 - l)) == int(cb.codes[s]):
+                lut[0, b] = s
+                hit = True
+                break
+        if not hit:
+            # must be the start of a longer code: pointer to its subtable
+            for j, p in enumerate(prefixes):
+                if b == p:
+                    lut[0, b] = 256 - (j + 1)
+                    hit = True
+                    break
+        if not hit:
+            lut[0, b] = 0  # unreachable padding pattern
+
+    for j, p in enumerate(prefixes):
+        for b in range(256):
+            for s in range(16):
+                l = int(cb.lengths[s])
+                if l > 8 and (int(cb.codes[s]) >> (l - 8)) == p:
+                    # low byte of the 16-bit left-justified code = tail bits
+                    tail_byte = (int(cb.codes[s]) << (16 - l)) & 0xFF
+                    tail_bits = l - 8
+                    if (b >> (8 - tail_bits)) == (tail_byte >> (8 - tail_bits)):
+                        lut[1 + j, b] = s
+                        break
+
+    lut[-1, :16] = cb.lengths[:16]
+    return lut
+
+
+def encode(weight_bits: np.ndarray, max_len: int = MAX_CODE_LEN,
+           bytes_per_thread: int = BYTES_PER_THREAD,
+           threads_per_block: int = THREADS_PER_BLOCK) -> PaperECF8:
+    """Compress an fp8 tensor (uint8 bit view) into the paper's container."""
+    orig_shape = tuple(weight_bits.shape)
+    flat = np.asarray(weight_bits, dtype=np.uint8).reshape(-1)
+    n = flat.shape[0]
+    exps = fp8.exponent_field(flat, xp=np)
+    signmant = fp8.signmant_nibble(flat, xp=np)
+    packed = fp8.pack_nibbles(signmant, xp=np)
+
+    freqs = np.bincount(exps, minlength=16)
+    cb = Codebook.from_freqs(freqs, max_len=max_len)
+    lut = build_cascaded_lut(cb)
+
+    encoded, total_bits = cb.encode_symbols(exps)
+
+    # --- synchronization metadata (gaps, outpos) --------------------------
+    B, T = bytes_per_thread, threads_per_block
+    block_bytes = B * T
+    n_bytes = encoded.shape[0]
+    n_blocks = max(1, -(-n_bytes // block_bytes))
+    n_threads = n_blocks * T
+
+    lens = cb.lengths[exps].astype(np.int64)
+    starts = np.cumsum(lens) - lens  # bit position where each symbol starts
+
+    # first symbol starting at or after each thread-window start bit
+    window_starts = np.arange(n_threads, dtype=np.int64) * (8 * B)
+    first_sym = np.searchsorted(starts, window_starts, side="left")
+    gap_bits = np.where(
+        first_sym < n,
+        starts[np.minimum(first_sym, n - 1)] - window_starts,
+        0,
+    )
+    gap_bits = np.clip(gap_bits, 0, 15).astype(np.uint8)
+    gaps = fp8.pack_nibbles(gap_bits, xp=np)
+
+    # symbols whose codeword starts within block b's byte range
+    block_starts_bits = np.arange(n_blocks + 1, dtype=np.int64) * (8 * block_bytes)
+    outpos = np.searchsorted(starts, block_starts_bits, side="left").astype(np.int64)
+    outpos[-1] = n
+
+    # pad the stream so every thread can read B + 2 lookahead bytes
+    padded_len = n_blocks * block_bytes + 2
+    if encoded.shape[0] < padded_len:
+        encoded = np.concatenate(
+            [encoded, np.zeros(padded_len - encoded.shape[0], dtype=np.uint8)]
+        )
+
+    return PaperECF8(
+        encoded=encoded, packed=packed, lut=lut, gaps=gaps, outpos=outpos,
+        n_elem=n, shape=orig_shape, codebook=cb,
+    )
+
+
+def decode_sequential(c: PaperECF8) -> np.ndarray:
+    """Sequential oracle decode -> original uint8 fp8 bit view."""
+    syms = c.codebook.decode_bitstream(c.encoded, c.n_elem)
+    signmant = fp8.unpack_nibbles(c.packed, c.n_elem, xp=np)
+    out = fp8.assemble(syms.astype(np.uint8), np.asarray(signmant), xp=np)
+    return out.reshape(c.shape)
+
+
+def _decode_with_lut(encoded: np.ndarray, lut: np.ndarray, bitpos: int):
+    """One LUT-cascade decode step at ``bitpos`` -> (symbol, length, newpos)."""
+    n_luts = lut.shape[0]
+
+    def peek_byte(p):
+        byte0 = p // 8
+        sh = p % 8
+        b0 = int(encoded[byte0]) if byte0 < len(encoded) else 0
+        b1 = int(encoded[byte0 + 1]) if byte0 + 1 < len(encoded) else 0
+        return ((b0 << 8 | b1) >> (8 - sh)) & 0xFF
+
+    x = int(lut[0, peek_byte(bitpos)])
+    if x >= LUT_POINTER_BASE:
+        x = int(lut[256 - x, peek_byte(bitpos + 8)])
+    l = int(lut[n_luts - 1, x])
+    return x, l, bitpos + l
+
+
+def decode_blockparallel(c: PaperECF8) -> np.ndarray:
+    """Numpy re-implementation of Algorithm 1's block/thread structure.
+
+    Follows the two-phase schedule (count -> prefix-sum -> decode) per block,
+    validating that the ``gaps``/``outpos`` metadata is sufficient for fully
+    autonomous block decoding (the paper's key kernel property).
+    """
+    B, T = BYTES_PER_THREAD, THREADS_PER_BLOCK
+    block_bytes = B * T
+    n_blocks = len(c.outpos) - 1
+    gap_vals = np.asarray(fp8.unpack_nibbles(c.gaps, n_blocks * T, xp=np))
+    out_syms = np.zeros(c.n_elem, dtype=np.uint8)
+    total_bits_limit = len(c.encoded) * 8
+
+    for b in range(n_blocks):
+        # Phase 1: per-thread symbol counting
+        counts = np.zeros(T, dtype=np.int64)
+        for t in range(T):
+            tg = b * T + t
+            start_bit = tg * 8 * B + int(gap_vals[tg])
+            end_bit = (tg + 1) * 8 * B
+            pos = start_bit
+            cnt = 0
+            while pos < min(end_bit, total_bits_limit):
+                _, l, pos = _decode_with_lut(c.encoded, c.lut, pos)
+                cnt += 1
+            counts[t] = cnt
+        # prefix sum -> per-thread output starts
+        starts = int(c.outpos[b]) + np.concatenate([[0], np.cumsum(counts)[:-1]])
+        # Phase 2: decode and write
+        for t in range(T):
+            tg = b * T + t
+            pos = tg * 8 * B + int(gap_vals[tg])
+            o = int(starts[t])
+            o_end = min(o + int(counts[t]), c.n_elem)
+            while o < o_end:
+                x, l, pos = _decode_with_lut(c.encoded, c.lut, pos)
+                out_syms[o] = x
+                o += 1
+
+    signmant = np.asarray(fp8.unpack_nibbles(c.packed, c.n_elem, xp=np))
+    return fp8.assemble(out_syms, signmant, xp=np).reshape(c.shape)

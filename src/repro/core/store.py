@@ -1,0 +1,242 @@
+"""Compressed parameter store — the paper's §3.3 tensor manager, JAX-native.
+
+The paper intercepts PyTorch forward hooks and decompresses each layer into a
+single pre-allocated GPU buffer.  The JAX-native equivalent: parameters are a
+pytree in which large weights are ``CompressedTensor`` leaves; model code
+calls :func:`materialize` at the point of use, *inside* the jitted step.
+Under scan-over-layers, XLA's buffer allocator reuses one decode buffer
+across layers — the same constant-overhead property, with no host round-trip.
+
+``CompressedTensor`` is a registered pytree, so it passes transparently
+through ``jax.jit`` / ``lax.scan`` (stacked layer compression: every child
+array carries a leading layer dim and scan slices it per step).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import fixedrate, fp8, tpu_format
+
+FORMAT_NONE = "none"
+FORMAT_TPU = "tpu"          # ECF8-TPU interleaved Huffman (uniform layout)
+FORMAT_FIXEDRATE = "fixedrate"  # ECF8-FR 2-bit + escapes
+
+
+@dataclass(frozen=True)
+class CompressedMeta:
+    fmt: str
+    shape: tuple
+    n_elem: int
+    sym_per_lane: int = 0
+    esc_capacity: int = 0
+    out_dtype: str = "bfloat16"
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class CompressedTensor:
+    """A compressed fp8 weight; decodes on use inside the jitted step."""
+
+    arrays: dict  # name -> jnp.ndarray (pytree children)
+    meta: CompressedMeta  # static
+
+    def tree_flatten(self):
+        names = tuple(sorted(self.arrays))
+        return tuple(self.arrays[k] for k in names), (names, self.meta)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        names, meta = aux
+        return cls(arrays=dict(zip(names, children)), meta=meta)
+
+    @property
+    def shape(self):  # so shape-inspecting model code keeps working
+        return self.meta.shape
+
+    @property
+    def ndim(self):
+        return len(self.meta.shape)
+
+    def nbytes_compressed(self) -> int:
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                   for a in self.arrays.values())
+
+
+def is_compressed(x: Any) -> bool:
+    return isinstance(x, CompressedTensor)
+
+
+def materialize(x, dtype=None):
+    """Decode a CompressedTensor to a dense array (identity for arrays)."""
+    if not is_compressed(x):
+        if dtype is not None and hasattr(x, "astype"):
+            return x.astype(dtype)
+        return x
+    m = x.meta
+    a = x.arrays
+    if m.fmt == FORMAT_TPU:
+        bits = tpu_format._decode_jnp_impl(
+            a["payload"], a["signmant"], a["lj_limit"], a["first_lj"],
+            a["offset"], a["perm"], sym_per_lane=m.sym_per_lane,
+            n_elem=m.n_elem,
+        )
+    elif m.fmt == FORMAT_FIXEDRATE:
+        bits = fixedrate._decode_jnp_impl(
+            a["codes"], a["escapes"], a["table"], a["signmant"],
+            n_elem=m.n_elem,
+        )
+    else:
+        raise ValueError(f"unknown format {m.fmt}")
+    w8 = bits.view(fp8.FP8_DTYPE).reshape(m.shape)
+    out_dtype = dtype if dtype is not None else m.out_dtype
+    return w8.astype(out_dtype)
+
+
+# --------------------------------------------------------------------------
+# encoding (host side, numpy)
+# --------------------------------------------------------------------------
+
+def compress_array(w8_bits: np.ndarray, fmt: str = FORMAT_TPU,
+                   out_dtype: str = "bfloat16",
+                   sym_per_lane: int = tpu_format.DEFAULT_SYM_PER_LANE,
+                   ) -> CompressedTensor:
+    """Compress one fp8 tensor (uint8 bit view, any shape)."""
+    if fmt == FORMAT_TPU:
+        c = tpu_format.encode(w8_bits, sym_per_lane=sym_per_lane)
+        arrays = {
+            "payload": jnp.asarray(c.payload),
+            "signmant": jnp.asarray(c.signmant),
+            "lj_limit": jnp.asarray(c.lj_limit),
+            "first_lj": jnp.asarray(c.first_lj),
+            "offset": jnp.asarray(c.offset),
+            "perm": jnp.asarray(c.perm),
+        }
+        meta = CompressedMeta(fmt=fmt, shape=tuple(c.shape), n_elem=c.n_elem,
+                              sym_per_lane=c.sym_per_lane, out_dtype=out_dtype)
+    elif fmt == FORMAT_FIXEDRATE:
+        c = fixedrate.encode(w8_bits)
+        arrays = {
+            "codes": jnp.asarray(c.codes),
+            "escapes": jnp.asarray(c.escapes),
+            "table": jnp.asarray(c.table),
+            "signmant": jnp.asarray(c.signmant),
+        }
+        meta = CompressedMeta(fmt=fmt, shape=tuple(c.shape), n_elem=c.n_elem,
+                              esc_capacity=c.esc_capacity, out_dtype=out_dtype)
+    else:
+        raise ValueError(f"unknown format {fmt}")
+    return CompressedTensor(arrays=arrays, meta=meta)
+
+
+def compress_stacked(w8_bits_stack: np.ndarray, fmt: str = FORMAT_TPU,
+                     out_dtype: str = "bfloat16",
+                     sym_per_lane: int = tpu_format.DEFAULT_SYM_PER_LANE,
+                     ) -> CompressedTensor:
+    """Compress a (layers, ...) stacked fp8 tensor layer-by-layer.
+
+    Each child array gains a leading ``layers`` dim; ``lax.scan`` slices it
+    so :func:`materialize` inside the scan body sees one layer's container.
+    Per-layer codebooks are kept (entropy varies per layer, paper Fig. 1);
+    payload strides / escape capacities are padded to the per-stack max so
+    the stack is rectangular.
+    """
+    L = w8_bits_stack.shape[0]
+    per_layer = [
+        compress_array(np.asarray(w8_bits_stack[i]), fmt=fmt,
+                       out_dtype=out_dtype, sym_per_lane=sym_per_lane)
+        for i in range(L)
+    ]
+    if fmt == FORMAT_TPU:
+        # pad payloads to common stride
+        stride = max(ct.arrays["payload"].shape[1] for ct in per_layer)
+        for ct in per_layer:
+            p = np.asarray(ct.arrays["payload"])
+            if p.shape[1] < stride:
+                p = np.pad(p, ((0, 0), (0, stride - p.shape[1]), (0, 0)))
+            ct.arrays["payload"] = jnp.asarray(p)
+    elif fmt == FORMAT_FIXEDRATE:
+        cap2 = max(ct.arrays["escapes"].shape[0] for ct in per_layer)
+        for ct in per_layer:
+            e = np.asarray(ct.arrays["escapes"])
+            if e.shape[0] < cap2:
+                e = np.pad(e, (0, cap2 - e.shape[0]))
+            ct.arrays["escapes"] = jnp.asarray(e)
+    arrays = {
+        k: jnp.stack([ct.arrays[k] for ct in per_layer])
+        for k in per_layer[0].arrays
+    }
+    return CompressedTensor(arrays=arrays, meta=per_layer[0].meta)
+
+
+def compress_tree(params, fmt: str = FORMAT_TPU, min_elems: int = 65536,
+                  out_dtype: str = "bfloat16", stacked_axes="auto",
+                  predicate: Callable[[Any], bool] | None = None):
+    """Cast a parameter pytree to fp8 and compress the large leaves.
+
+    ``stacked_axes``: 1 treats each leaf's leading dim as a scan (layer)
+    axis; 0 treats leaves as single tensors; "auto" (default) stacks leaves
+    whose path goes through a scan collection ("units" / "layers") — the
+    model's parameter layout.  Small leaves (norm scales, biases) stay in
+    their original dtype — same policy as the paper, which compresses only
+    weight matrices.  Returns (compressed_tree, report dict).
+    """
+    report = {"raw_bytes": 0, "fp8_bytes": 0, "compressed_bytes": 0,
+              "n_compressed": 0, "n_kept": 0}
+
+    def visit(path, x):
+        if not hasattr(x, "shape") or (predicate and not predicate(x)):
+            report["n_kept"] += 1
+            return x
+        if stacked_axes == "auto":
+            names = [str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path]
+            stacked = int("units" in names or "layers" in names)
+        else:
+            stacked = int(stacked_axes)
+        n = int(np.prod(x.shape)) if x.ndim else 1
+        report["raw_bytes"] += n * x.dtype.itemsize
+        per_layer_elems = n // x.shape[0] if (stacked and x.ndim) else n
+        if per_layer_elems < min_elems or x.ndim < 2 + stacked:
+            report["n_kept"] += 1
+            return x
+        w8 = np.asarray(jnp.asarray(x).astype(fp8.FP8_DTYPE)).view(np.uint8)
+        report["fp8_bytes"] += n
+        if stacked:
+            ct = compress_stacked(w8, fmt=fmt, out_dtype=out_dtype)
+        else:
+            ct = compress_array(w8, fmt=fmt, out_dtype=out_dtype)
+        report["compressed_bytes"] += ct.nbytes_compressed()
+        report["n_compressed"] += 1
+        return ct
+
+    tree = jax.tree_util.tree_map_with_path(visit, params)
+    return tree, report
+
+
+def fp8_cast_tree(params, min_elems: int = 65536, stacked_axes="auto"):
+    """The FP8 *baseline*: cast large weights to fp8, keep the rest.
+
+    This is what ECF8 is compared against (the paper compresses released FP8
+    checkpoints; the fp8 cast itself defines the baseline bits).  The leaf
+    selection rule matches :func:`compress_tree` exactly so the two trees
+    are bit-comparable."""
+    def visit(path, x):
+        if not hasattr(x, "shape"):
+            return x
+        if stacked_axes == "auto":
+            names = [str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path]
+            stacked = int("units" in names or "layers" in names)
+        else:
+            stacked = int(stacked_axes)
+        n = int(np.prod(x.shape)) if x.ndim else 1
+        per_layer = n // x.shape[0] if (stacked and x.ndim) else n
+        if per_layer < min_elems or x.ndim < 2 + stacked:
+            return x
+        return jnp.asarray(x).astype(fp8.FP8_DTYPE)
+    return jax.tree_util.tree_map_with_path(visit, params)

@@ -1,0 +1,283 @@
+"""ECF8-TPU: the TPU-native adaptation of the paper's compressed container.
+
+Design (DESIGN.md §3): instead of one sequential bitstream + per-thread bit
+gaps (a GPU-warp construct), weights are encoded into **128 interleaved lane
+streams per chunk** so an 8x128 TPU vector unit decodes 128 streams in
+lockstep:
+
+  * element ``i`` of chunk ``c`` maps to lane ``i % 128``, slot ``i // 128``;
+  * every lane of every chunk carries exactly ``sym_per_lane`` symbols, so
+    output positions are static (no counting phase / prefix sum needed);
+  * codes are canonical Huffman with max length 8 (package-merge), decoded by
+    comparing the 8-bit peek against per-length canonical limits — 8
+    vectorized compare/selects, no table gathers;
+  * chunk payloads are stored transposed ``(stride, 128)`` so "byte j of all
+    lanes" is one contiguous vector row.
+
+Two payload layouts:
+  * ``uniform``: all chunks padded to the tensor-wide max lane stride —
+    shape ``(C, stride, 128)``; decodable fully in parallel with plain jnp
+    (used in-graph by serve steps on any backend);
+  * ``ragged``: per-chunk strides + offsets — denser; consumed by the Pallas
+    kernel via scalar-prefetch indexed blocks.
+
+Both are bit-exact; the uniform padding tax is reported by benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import fp8
+from .huffman import Codebook
+
+LANES = 128
+DEFAULT_SYM_PER_LANE = 256
+MAX_CODE_LEN = 8
+MIN_STRIDE = 4  # decode window preloads 4 bytes
+
+
+@dataclass
+class TpuECF8:
+    """ECF8-TPU compressed tensor (host-side numpy arrays)."""
+
+    payload: np.ndarray        # uniform: (C, stride, LANES) uint8
+    payload_ragged: np.ndarray  # flat uint8, per-chunk (stride_c, LANES) blocks
+    chunk_offsets: np.ndarray  # (C+1,) int32 byte offsets into payload_ragged
+    chunk_strides: np.ndarray  # (C,) int32
+    signmant: np.ndarray       # (ceil(N/2),) uint8 nibble-packed
+    # canonical decode tables (all small)
+    lj_limit: np.ndarray       # (8,) int32, exclusive, left-justified to 8 bits
+    first_lj: np.ndarray       # (8,) int32
+    offset: np.ndarray         # (8,) int32
+    perm: np.ndarray           # (16,) int32 canonical-order symbol values
+    lengths: np.ndarray        # (16,) int32 code length per symbol (encode side)
+    n_elem: int
+    shape: tuple
+    sym_per_lane: int
+
+    @property
+    def num_chunks(self) -> int:
+        return self.payload.shape[0]
+
+    @property
+    def stride(self) -> int:
+        return self.payload.shape[1]
+
+    def nbytes(self, layout: str = "ragged") -> int:
+        tables = (
+            self.lj_limit.nbytes + self.first_lj.nbytes + self.offset.nbytes
+            + self.perm.nbytes
+        )
+        if layout == "uniform":
+            return self.payload.nbytes + self.signmant.nbytes + tables
+        return (
+            self.payload_ragged.nbytes + self.chunk_offsets.nbytes
+            + self.signmant.nbytes + tables
+        )
+
+    def ratio(self, layout: str = "ragged") -> float:
+        return self.nbytes(layout) / max(self.n_elem, 1)
+
+
+def encode(weight_bits: np.ndarray,
+           sym_per_lane: int = DEFAULT_SYM_PER_LANE) -> TpuECF8:
+    """Compress an fp8 tensor (uint8 bit view) into ECF8-TPU."""
+    orig_shape = tuple(weight_bits.shape)
+    flat = np.asarray(weight_bits, dtype=np.uint8).reshape(-1)
+    n = flat.shape[0]
+    exps = fp8.exponent_field(flat, xp=np).astype(np.int64)
+    signmant = fp8.signmant_nibble(flat, xp=np)
+
+    freqs = np.bincount(exps, minlength=16)
+    cb = Codebook.from_freqs(freqs, max_len=MAX_CODE_LEN)
+
+    # auto-cap the chunk so tensors smaller than one full chunk don't pay
+    # a whole chunk of padding (small norm/bias tensors, smoke configs)
+    S = min(sym_per_lane, max(-(-n // LANES), MIN_STRIDE))
+    chunk_sym = LANES * S
+    n_pad = -n % chunk_sym
+    pad_sym = int(np.argmax(freqs))
+    exps_p = np.concatenate([exps, np.full(n_pad, pad_sym, dtype=np.int64)])
+    C = exps_p.shape[0] // chunk_sym
+
+    # element (c, s, l) -> index c*chunk_sym + s*LANES + l
+    exps_csl = exps_p.reshape(C, S, LANES)
+    codes = cb.codes[exps_csl]                    # (C, S, L) int64
+    lens = cb.lengths[exps_csl].astype(np.int64)  # (C, S, L)
+
+    # per-lane streams: rows = (c, l), S symbols each
+    codes_r = codes.transpose(0, 2, 1).reshape(C * LANES, S)
+    lens_r = lens.transpose(0, 2, 1).reshape(C * LANES, S)
+    starts_r = np.cumsum(lens_r, axis=1) - lens_r
+    lane_bits = starts_r[:, -1] + lens_r[:, -1]          # (C*L,)
+    lane_bytes = (lane_bits + 7) // 8
+    stride_per_chunk = np.maximum(
+        lane_bytes.reshape(C, LANES).max(axis=1), MIN_STRIDE
+    ).astype(np.int64)
+    stride = int(stride_per_chunk.max())
+
+    # vectorized bit blit into (C*L, stride*8) bit matrix
+    flat_lens = lens_r.reshape(-1)
+    total_bits = int(flat_lens.sum())
+    rep_rows = np.repeat(
+        np.repeat(np.arange(C * LANES), S), flat_lens
+    )
+    within = _concat_aranges(flat_lens)
+    bitpos = np.repeat(starts_r.reshape(-1), flat_lens) + within
+    shift = np.repeat(flat_lens, flat_lens) - 1 - within
+    bitvals = (np.repeat(codes_r.reshape(-1), flat_lens) >> shift) & 1
+    bitmat = np.zeros((C * LANES, stride * 8), dtype=np.uint8)
+    bitmat[rep_rows, bitpos] = bitvals.astype(np.uint8)
+
+    weights = (1 << np.arange(7, -1, -1)).astype(np.uint16)
+    bytemat = (
+        bitmat.reshape(C * LANES, stride, 8).astype(np.uint16) * weights
+    ).sum(axis=2).astype(np.uint8)                        # (C*L, stride)
+    payload = bytemat.reshape(C, LANES, stride).transpose(0, 2, 1).copy()
+
+    # ragged layout: per-chunk stride_c slices
+    offsets = np.zeros(C + 1, dtype=np.int64)
+    ragged_parts = []
+    for c in range(C):
+        sc = int(stride_per_chunk[c])
+        ragged_parts.append(payload[c, :sc, :].reshape(-1))
+        offsets[c + 1] = offsets[c] + sc * LANES
+    payload_ragged = (
+        np.concatenate(ragged_parts) if ragged_parts
+        else np.zeros(0, dtype=np.uint8)
+    )
+
+    return TpuECF8(
+        payload=payload,
+        payload_ragged=payload_ragged,
+        chunk_offsets=offsets.astype(np.int32),
+        chunk_strides=stride_per_chunk.astype(np.int32),
+        signmant=fp8.pack_nibbles(signmant, xp=np),
+        lj_limit=cb.lj_limit.astype(np.int32),
+        first_lj=cb.first_lj.astype(np.int32),
+        offset=cb.offset.astype(np.int32),
+        perm=cb.sorted_syms.astype(np.int32),
+        lengths=cb.lengths.astype(np.int32),
+        n_elem=n,
+        shape=orig_shape,
+        sym_per_lane=S,
+    )
+
+
+def decode_ref(c: TpuECF8) -> np.ndarray:
+    """Readable per-lane numpy oracle -> original uint8 fp8 bit view."""
+    C, stride, L = c.payload.shape
+    S = c.sym_per_lane
+    syms = np.zeros((C, S, L), dtype=np.uint8)
+    cb = _codebook_view(c)
+    for ci in range(C):
+        for l in range(L):
+            stream = c.payload[ci, :, l]
+            bitpos = 0
+            for s in range(S):
+                peek = 0
+                for b in range(MAX_CODE_LEN):
+                    p = bitpos + b
+                    bit = (int(stream[p // 8]) >> (7 - p % 8)) & 1 \
+                        if p // 8 < stride else 0
+                    peek = (peek << 1) | bit
+                sym, ln = cb.decode_peek(peek)
+                syms[ci, s, l] = sym
+                bitpos += ln
+    return _assemble(c, syms.reshape(-1)[: c.n_elem])
+
+
+@partial(jax.jit, static_argnames=("sym_per_lane", "n_elem"))
+def _decode_jnp_impl(payload, signmant, lj_limit, first_lj, offset, perm,
+                     sym_per_lane: int, n_elem: int):
+    """Vectorized decode of the uniform layout; all chunks in parallel.
+
+    Maintains a per-lane left-aligned uint32 bit window; each round does the
+    canonical compare/select decode on the top 8 bits, shifts, and refills at
+    most one byte via a per-lane gather (take_along_axis).  Invariant: at the
+    top of each round ``bits_valid >= 24 >= 8``.
+    """
+    C, stride, L = payload.shape
+    S = sym_per_lane
+    p32 = payload.astype(jnp.uint32)
+    win = (
+        (p32[:, 0, :] << 24) | (p32[:, 1, :] << 16)
+        | (p32[:, 2, :] << 8) | p32[:, 3, :]
+    )                                           # (C, L)
+    byteptr = jnp.full((C, L), 4, dtype=jnp.int32)
+    bits_valid = jnp.full((C, L), 32, dtype=jnp.int32)
+
+    lj_limit_i = lj_limit.astype(jnp.int32)
+    first_lj_i = first_lj.astype(jnp.int32)
+    offset_i = offset.astype(jnp.int32)
+    perm_i = perm.astype(jnp.int32)
+
+    def round_fn(_, carry):
+        win, byteptr, bits_valid, outs, s = carry
+        peek = (win >> 24).astype(jnp.int32)    # (C, L) in [0, 256)
+        lt = peek[..., None] < lj_limit_i[None, None, :]   # (C, L, 8)
+        length = jnp.argmax(lt, axis=-1).astype(jnp.int32) + 1
+        fl = jnp.take(first_lj_i, length - 1)
+        off = jnp.take(offset_i, length - 1)
+        sym_idx = off + ((peek - fl) >> (8 - length))
+        sym = jnp.take(perm_i, sym_idx).astype(jnp.uint8)
+        outs = jax.lax.dynamic_update_index_in_dim(outs, sym, s, axis=1)
+
+        win = win << length.astype(jnp.uint32)
+        bits_valid = bits_valid - length
+        need = bits_valid <= 24
+        safe_ptr = jnp.minimum(byteptr, stride - 1)
+        nb = jnp.take_along_axis(
+            payload, safe_ptr[:, None, :], axis=1
+        )[:, 0, :].astype(jnp.uint32)
+        win = jnp.where(
+            need, win | (nb << (24 - bits_valid).astype(jnp.uint32)), win
+        )
+        byteptr = byteptr + need.astype(jnp.int32)
+        bits_valid = bits_valid + 8 * need.astype(jnp.int32)
+        return win, byteptr, bits_valid, outs, s + 1
+
+    outs = jnp.zeros((C, S, L), dtype=jnp.uint8)
+    _, _, _, outs, _ = jax.lax.fori_loop(
+        0, S, round_fn, (win, byteptr, bits_valid, outs, 0)
+    )
+    syms = outs.reshape(-1)[:n_elem]
+    sm = fp8.unpack_nibbles(signmant, n_elem, xp=jnp)
+    return fp8.assemble(syms, sm, xp=jnp)
+
+
+def decode_jnp(c: TpuECF8) -> jnp.ndarray:
+    """In-graph decode of the uniform layout -> uint8 fp8 bits (n_elem,)."""
+    return _decode_jnp_impl(
+        jnp.asarray(c.payload), jnp.asarray(c.signmant),
+        jnp.asarray(c.lj_limit), jnp.asarray(c.first_lj),
+        jnp.asarray(c.offset), jnp.asarray(c.perm),
+        sym_per_lane=c.sym_per_lane, n_elem=c.n_elem,
+    )
+
+
+def _codebook_view(c: TpuECF8) -> Codebook:
+    cb = Codebook(lengths=np.asarray(c.lengths), codes=None,  # type: ignore
+                  max_len=MAX_CODE_LEN)
+    cb.sorted_syms = np.asarray(c.perm)
+    cb.lj_limit = np.asarray(c.lj_limit, dtype=np.int64)
+    cb.first_lj = np.asarray(c.first_lj, dtype=np.int64)
+    cb.offset = np.asarray(c.offset, dtype=np.int64)
+    return cb
+
+
+def _assemble(c: TpuECF8, syms: np.ndarray) -> np.ndarray:
+    sm = np.asarray(fp8.unpack_nibbles(c.signmant, c.n_elem, xp=np))
+    return fp8.assemble(syms.astype(np.uint8), sm, xp=np).reshape(c.shape)
+
+
+def _concat_aranges(lens: np.ndarray) -> np.ndarray:
+    total = int(lens.sum())
+    ids = np.arange(total)
+    starts = np.repeat(np.cumsum(lens) - lens, lens)
+    return ids - starts

@@ -1,0 +1,198 @@
+"""Pallas TPU kernel: fused ECF8 decode + GEMM  (y = x @ decode(W)).
+
+The paper's throughput story is that compressed weights stream from memory
+and are decompressed *just before* the GEMM.  On TPU we go one step further
+and fuse the two: the ECF8-TPU chunk geometry (128 lanes x ``sym_per_lane``
+slots) is chosen so **one chunk decodes to exactly one (bk=S, bn=128) weight
+tile**, which is fed straight to the MXU from VMEM — compressed bytes are
+the only weight traffic that ever touches HBM.
+
+Weight layout: W (K, N) is tiled into (TK, TN) tiles of (S, 128); tile
+(tk, tn) is encoded as chunk index ``tk * TN + tn`` with element (k, n) at
+slot ``s = k``, lane ``l = n``.  The kernel grid is (TN, TK) with TK
+innermost: the fp32 out block (M, 128) for column tn accumulates over tk.
+
+This kernel targets the *decode/serving* GEMM shape (M = batch <= 512, one
+M block — the paper's regime: weight-streaming-bound batched token decode).
+For prefill-sized M, decode standalone (``ecf8_decode``) + regular GEMM is
+the right structure; see DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import fp8 as fp8mod
+from repro.core import tpu_format
+from repro.core.tpu_format import LANES, MAX_CODE_LEN
+
+
+@dataclass
+class TiledECF8Weight:
+    """(K, N) fp8 weight in fused-GEMM tile order (host-side arrays)."""
+
+    payload: np.ndarray   # (TK, TN, stride, LANES) uint8
+    signmant: np.ndarray  # (TK, TN, S * LANES // 2) uint8
+    lj_limit: np.ndarray  # (8,) int32
+    first_lj: np.ndarray
+    offset: np.ndarray
+    perm: np.ndarray      # (16,) int32
+    k: int
+    n: int
+    sym_per_lane: int
+
+    @property
+    def nbytes(self) -> int:
+        return (self.payload.nbytes + self.signmant.nbytes + 4 * (8 * 3 + 16))
+
+
+def encode_tiled(w_bits: np.ndarray,
+                 sym_per_lane: int = 256) -> TiledECF8Weight:
+    """Pack a (K, N) fp8 weight (uint8 bit view) into fused-GEMM tile order."""
+    K, N = w_bits.shape
+    S = sym_per_lane
+    assert K % S == 0 and N % LANES == 0, (K, N, S, LANES)
+    TK, TN = K // S, N // LANES
+    # tile (tk, tn), element (k=s, n=l)  ->  chunk tk*TN+tn, slot s, lane l
+    perm_elems = (
+        w_bits.reshape(TK, S, TN, LANES).transpose(0, 2, 1, 3).reshape(-1)
+    )
+    c = tpu_format.encode(perm_elems, sym_per_lane=S)
+    C, stride, _ = c.payload.shape
+    assert C == TK * TN
+    total_sm = C * S * LANES // 2
+    sm = np.zeros(total_sm, dtype=np.uint8)
+    sm[: c.signmant.shape[0]] = c.signmant
+    return TiledECF8Weight(
+        payload=np.asarray(c.payload).reshape(TK, TN, stride, LANES),
+        signmant=sm.reshape(TK, TN, S * LANES // 2),
+        lj_limit=c.lj_limit, first_lj=c.first_lj, offset=c.offset,
+        perm=c.perm, k=K, n=N, sym_per_lane=S,
+    )
+
+
+def _fused_kernel(limit_ref, first_ref, offset_ref, perm_ref, x_ref,
+                  payload_ref, signmant_ref, out_ref, w_scratch, *,
+                  sym_per_lane: int, stride: int, n_tk: int):
+    S = sym_per_lane
+    tk = pl.program_id(1)
+    payload = payload_ref[0, 0].astype(jnp.uint32)     # (stride, L)
+
+    win = ((payload[0:1, :] << 24) | (payload[1:2, :] << 16)
+           | (payload[2:3, :] << 8) | payload[3:4, :])
+    byteptr = jnp.full((1, LANES), 4, dtype=jnp.int32)
+    bits_valid = jnp.full((1, LANES), 32, dtype=jnp.int32)
+
+    smp = signmant_ref[0, 0].reshape(S, LANES // 2)
+    sm_hi = (smp >> 4) & jnp.uint8(0x0F)
+    sm_lo = smp & jnp.uint8(0x0F)
+    sm = jnp.stack([sm_hi, sm_lo], axis=-1).reshape(S, LANES).astype(jnp.int32)
+
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (stride, LANES), 0)
+
+    def round_fn(s, carry):
+        win, byteptr, bits_valid = carry
+        peek = (win >> 24).astype(jnp.int32)
+        length = jnp.zeros((1, LANES), jnp.int32)
+        sym_idx = jnp.zeros((1, LANES), jnp.int32)
+        found = jnp.zeros((1, LANES), jnp.bool_)
+        for l in range(1, MAX_CODE_LEN + 1):
+            cond = jnp.logical_and(peek < limit_ref[0, l - 1],
+                                   jnp.logical_not(found))
+            idx_l = offset_ref[0, l - 1] + (
+                (peek - first_ref[0, l - 1]) >> (8 - l)
+            )
+            length = jnp.where(cond, l, length)
+            sym_idx = jnp.where(cond, idx_l, sym_idx)
+            found = jnp.logical_or(found, cond)
+        sym = jnp.zeros((1, LANES), jnp.int32)
+        for k in range(16):
+            sym = jnp.where(sym_idx == k, perm_ref[0, k], sym)
+
+        sm_s = jax.lax.dynamic_slice_in_dim(sm, s, 1, axis=0)
+        byte = ((sm_s & 8) << 4) | (sym << 3) | (sm_s & 7)
+        w_row = byte.astype(jnp.uint8).view(fp8mod.FP8_DTYPE).astype(
+            jnp.bfloat16)
+        pl.store(w_scratch, (pl.dslice(s, 1), slice(None)), w_row)
+
+        win = win << length.astype(jnp.uint32)
+        bits_valid = bits_valid - length
+        need = bits_valid <= 24
+        safe_ptr = jnp.minimum(byteptr, stride - 1)
+        nb = jnp.sum(jnp.where(row_iota == safe_ptr, payload, jnp.uint32(0)),
+                     axis=0, keepdims=True)
+        win = jnp.where(need,
+                        win | (nb << (24 - bits_valid).astype(jnp.uint32)),
+                        win)
+        byteptr = byteptr + need.astype(jnp.int32)
+        bits_valid = bits_valid + 8 * need.astype(jnp.int32)
+        return win, byteptr, bits_valid
+
+    jax.lax.fori_loop(0, S, round_fn, (win, byteptr, bits_valid))
+
+    @pl.when(tk == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.bfloat16), w_scratch[...],
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sym_per_lane", "k", "n", "interpret",
+                                    "out_dtype"))
+def _matmul_impl(x, payload, signmant, lj_limit, first_lj, offset, perm, *,
+                 sym_per_lane: int, k: int, n: int, interpret: bool,
+                 out_dtype):
+    M = x.shape[0]
+    S = sym_per_lane
+    TK, TN, stride, _ = payload.shape
+    kernel = functools.partial(_fused_kernel, sym_per_lane=S, stride=stride,
+                               n_tk=TK)
+    out = pl.pallas_call(
+        kernel,
+        grid=(TN, TK),
+        in_specs=[
+            pl.BlockSpec((1, 8), lambda tn, tk: (0, 0)),
+            pl.BlockSpec((1, 8), lambda tn, tk: (0, 0)),
+            pl.BlockSpec((1, 8), lambda tn, tk: (0, 0)),
+            pl.BlockSpec((1, 16), lambda tn, tk: (0, 0)),
+            pl.BlockSpec((M, S), lambda tn, tk: (0, tk)),          # x
+            pl.BlockSpec((1, 1, stride, LANES),
+                         lambda tn, tk: (tk, tn, 0, 0)),           # payload
+            pl.BlockSpec((1, 1, S * LANES // 2),
+                         lambda tn, tk: (tk, tn, 0)),              # signmant
+        ],
+        out_specs=pl.BlockSpec((M, LANES), lambda tn, tk: (0, tn)),
+        out_shape=jax.ShapeDtypeStruct((M, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((S, LANES), jnp.bfloat16)],
+        interpret=interpret,
+    )(
+        lj_limit.reshape(1, 8).astype(jnp.int32),
+        first_lj.reshape(1, 8).astype(jnp.int32),
+        offset.reshape(1, 8).astype(jnp.int32),
+        perm.reshape(1, 16).astype(jnp.int32),
+        x, payload, signmant,
+    )
+    return out.astype(out_dtype)
+
+
+def matmul_pallas(x, w: TiledECF8Weight, *, out_dtype=jnp.float32,
+                  interpret: bool = True):
+    """y = x @ decode(W); x: (M, K) with M <= 512 (decode-GEMM regime)."""
+    assert x.shape[1] == w.k, (x.shape, w.k)
+    return _matmul_impl(
+        jnp.asarray(x), jnp.asarray(w.payload), jnp.asarray(w.signmant),
+        jnp.asarray(w.lj_limit), jnp.asarray(w.first_lj),
+        jnp.asarray(w.offset), jnp.asarray(w.perm),
+        sym_per_lane=w.sym_per_lane, k=w.k, n=w.n, interpret=interpret,
+        out_dtype=out_dtype,
+    )

@@ -1,0 +1,32 @@
+"""Pure-jnp / numpy oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import fixedrate, fp8, tpu_format
+
+
+def decode_tpu_ref(container: tpu_format.TpuECF8) -> np.ndarray:
+    """Oracle for ``ecf8_decode`` (readable per-lane numpy loop)."""
+    return tpu_format.decode_ref(container)
+
+
+def decode_tpu_jnp(container: tpu_format.TpuECF8) -> jnp.ndarray:
+    """Vectorized jnp reference (also the in-graph fallback path)."""
+    return tpu_format.decode_jnp(container)
+
+
+def decode_fixedrate_ref(container: fixedrate.FixedRateECF8) -> np.ndarray:
+    """Oracle for the fixed-rate decode path."""
+    return fixedrate.decode_ref(container)
+
+
+def fused_decode_matmul_ref(x: np.ndarray, w_bits: np.ndarray,
+                            out_dtype=jnp.float32) -> jnp.ndarray:
+    """Oracle for ``fused_decode_matmul``: x @ upcast(fp8(W)).
+
+    ``w_bits`` is the (K, N) uint8 bit view of the fp8 weight."""
+    w = jnp.asarray(w_bits).view(fp8.FP8_DTYPE).astype(jnp.bfloat16)
+    return jnp.dot(jnp.asarray(x, jnp.bfloat16), w,
+                   preferred_element_type=out_dtype)

@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax import/initialization: jax locks the device count
+#   on first backend init.  Only the dry-run sees 512 placeholder devices.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, without allocating any real buffers:
+  * proof the sharding config is coherent (compile succeeds),
+  * ``memory_analysis()``   -> per-device bytes (does it fit HBM),
+  * ``cost_analysis()``     -> per-device FLOPs / bytes for the roofline,
+  * collective wire bytes parsed from the post-SPMD HLO,
+all dumped to ``experiments/artifacts/<arch>__<shape>__<mesh>[__tag].json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-20b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+  python -m repro.launch.dryrun --all --mesh single --rules none --tag base
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo_cost import analyze as hlo_cost_analyze
+from repro.analysis.hlo_parse import collective_bytes, op_histogram
+from repro.analysis.roofline import roofline_terms
+from repro.configs import ASSIGNED, SHAPES, get, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import sharding as SH
+from repro.runtime.steps import (cache_specs, compressed_param_specs,
+                                 input_specs, make_decode_step,
+                                 make_prefill_step, make_train_step,
+                                 opt_specs, param_specs)
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "experiments", "artifacts")
+
+
+def _batch_pspec(specs: dict, mesh) -> dict:
+    ba = SH.batch_axes(mesh)
+    ba_size = 1
+    for a in (ba if isinstance(ba, tuple) else (ba,)):
+        ba_size *= mesh.shape[a]
+    out = {}
+    for k, v in specs.items():
+        b = ba if v.shape[0] % ba_size == 0 else None
+        out[k] = P(b, *(None,) * (len(v.shape) - 1))
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, mesh_kind: str,
+               rules: SH.ShardingRules = SH.DEFAULT_RULES,
+               grad_accum: int = 1, remat: bool = True,
+               keep_hlo: bool = False,
+               assume_flash_kernel: bool = False,
+               param_dtype: str | None = None,
+               compressed: bool = False) -> dict:
+    """Lower + compile one cell; return the artifact dict."""
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    runs, why = shape_applicable(cfg, shape)
+    if not runs:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "skipped": True, "reason": why}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    t0 = time.time()
+
+    p_sds = (compressed_param_specs(cfg) if compressed
+             else param_specs(cfg, jnp.dtype(param_dtype) if param_dtype
+                              else None))
+    p_spec = SH.param_pspecs(cfg, p_sds, mesh, rules)
+    p_named = SH.named(mesh, p_spec)
+    in_sds = input_specs(cfg, shape)
+    b_spec = _batch_pspec(in_sds, mesh)
+    b_named = {k: NamedSharding(mesh, s) for k, s in b_spec.items()}
+
+    with mesh:
+        if shape.kind == "train":
+            o_sds = opt_specs(cfg)
+            o_named = SH.named(mesh, SH.opt_pspecs(p_spec))
+            step = make_train_step(cfg, AdamWConfig(), mesh=mesh,
+                                   rules=rules, remat=remat,
+                                   grad_accum=grad_accum)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_named, o_named, b_named, None),
+                out_shardings=(p_named, o_named, None),
+                donate_argnums=(0, 1),
+            ).lower(p_sds, o_sds, in_sds, jax.ShapeDtypeStruct((), jnp.int32))
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, mesh=mesh, rules=rules,
+                                     max_len=shape.seq_len)
+            c_sds = cache_specs(cfg, shape.global_batch, shape.seq_len,
+                                jnp.dtype(cfg.dtype))
+            c_named = SH.named(mesh, SH.cache_pspecs(cfg, c_sds, mesh))
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_named, b_named),
+                out_shardings=(None, c_named),
+            ).lower(p_sds, in_sds)
+        else:  # decode
+            step = make_decode_step(cfg, mesh=mesh, rules=rules)
+            c_sds = cache_specs(cfg, shape.global_batch, shape.seq_len,
+                                jnp.dtype(cfg.dtype))
+            c_named = SH.named(mesh, SH.cache_pspecs(cfg, c_sds, mesh))
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_named, b_named, c_named),
+                out_shardings=(None, c_named),
+                donate_argnums=(2,),
+            ).lower(p_sds, in_sds, c_sds)
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll_flat = collective_bytes(hlo)     # no loop scaling (diagnostic)
+    hist = op_histogram(hlo)
+    # trip-count-aware re-analysis: XLA's cost_analysis counts while bodies
+    # once; scans/maps/fori must be scaled by their static trip counts
+    vmem_tiles = None
+    if assume_flash_kernel and shape.kind in ("train", "prefill"):
+        # the Pallas flash kernel (kernels/flash_fwd.py, validated vs the
+        # jnp oracle) keeps the s/p tiles in VMEM; exclude their HBM
+        # traffic from the memory term (FLOPs/collectives unchanged)
+        n_model = 16
+        t_loc = max(shape.seq_len // n_model, 1)
+        qc = min(512, t_loc)
+        vmem_tiles = {"qcs": {qc, qc * cfg.n_heads}, "kc": 1024}
+    corrected = hlo_cost_analyze(hlo, vmem_tiles=vmem_tiles)
+
+    mem_d = {
+        k: int(getattr(mem, k))
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes")
+        if hasattr(mem, k)
+    }
+    raw_cost_d = {k: float(cost[k]) for k in ("flops", "bytes accessed")
+                  if k in cost}
+    cost_d = {"flops": corrected["flops"],
+              "bytes accessed": corrected["bytes"]}
+    coll = dict(corrected["coll"])
+    art = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "rules": {"activation_partitioning": rules.activation_partitioning,
+                  "vocab_tp": rules.vocab_tp,
+                  "expert_fsdp": rules.expert_fsdp},
+        "grad_accum": grad_accum, "remat": remat,
+        "n_chips": n_chips,
+        "memory_analysis": mem_d,
+        "cost_analysis": cost_d,
+        "cost_analysis_xla_raw": raw_cost_d,
+        "unknown_trip_loops": corrected.get("unknown_trip_loops", 0),
+        "assume_flash_kernel": assume_flash_kernel,
+        "vmem_dropped_bytes": corrected.get("vmem_dropped_bytes", 0.0),
+        "collectives": coll,
+        "collectives_unscaled": {k: v for k, v in coll_flat.items()
+                                 if k != "ops"},
+        "collective_ops_top": sorted(
+            coll_flat["ops"], key=lambda t: -t[1])[:12],
+        "op_histogram": hist,
+        "compile_seconds": time.time() - t0,
+        "roofline": roofline_terms(cost_d, coll, n_chips, get(arch), shape),
+        "skipped": False,
+    }
+    if keep_hlo:
+        art["hlo_text_path"] = _dump_hlo(arch, shape_name, mesh_kind, hlo)
+    del compiled, lowered
+    return art
+
+
+def _dump_hlo(arch, shape_name, mesh_kind, hlo):
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, f"{arch}__{shape_name}__{mesh_kind}.hlo")
+    with open(path, "w") as f:
+        f.write(hlo)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--rules", default="seq",
+                    choices=["seq", "dmodel", "none"])
+    ap.add_argument("--no-vocab-tp", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--attn", default="flash",
+                    choices=["flash", "blockwise"],
+                    help="full-attention impl (blockwise = naive baseline)")
+    ap.add_argument("--assume-flash-kernel", action="store_true",
+                    help="account s/p tiles as VMEM-resident (Pallas "
+                         "kernel, kernels/flash_fwd.py)")
+    ap.add_argument("--serve-tp", action="store_true",
+                    help="serving rule: weights pure-TP (no FSDP axis)")
+    ap.add_argument("--param-dtype", default=None,
+                    choices=[None, "bfloat16", "float8_e4m3fn"],
+                    help="override parameter storage dtype (fp8 = the "
+                         "paper's serving baseline)")
+    ap.add_argument("--compressed", action="store_true",
+                    help="lower with ECF8-compressed weights (decode-on-"
+                         "use inside the step — the paper's technique)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--out", default=ARTIFACTS)
+    args = ap.parse_args()
+
+    from repro.models.layers import set_attention_impl
+    set_attention_impl(args.attn)
+    rules = SH.ShardingRules(activation_partitioning=args.rules,
+                             vocab_tp=not args.no_vocab_tp,
+                             serve_tp=args.serve_tp)
+    archs = ASSIGNED if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                tag = f"__{args.tag}" if args.tag else ""
+                name = f"{arch}__{shape_name}__{mesh_kind}{tag}"
+                try:
+                    art = lower_cell(arch, shape_name, mesh_kind,
+                                     rules=rules,
+                                     grad_accum=args.grad_accum,
+                                     remat=not args.no_remat,
+                                     keep_hlo=args.keep_hlo,
+                                     assume_flash_kernel=
+                                     args.assume_flash_kernel,
+                                     param_dtype=args.param_dtype,
+                                     compressed=args.compressed)
+                except Exception as e:
+                    art = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_kind, "skipped": False,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-3000:]}
+                    n_fail += 1
+                    print(f"[FAIL] {name}: {type(e).__name__}: "
+                          f"{str(e)[:200]}")
+                else:
+                    if art.get("skipped"):
+                        n_skip += 1
+                        print(f"[skip] {name}: {art['reason'][:80]}")
+                    else:
+                        n_ok += 1
+                        r = art["roofline"]
+                        print(f"[ ok ] {name}: compute {r['t_compute']:.4f}s"
+                              f" memory {r['t_memory']:.4f}s collective "
+                              f"{r['t_collective']:.4f}s -> {r['dominant']}"
+                              f" (compile {art['compile_seconds']:.0f}s)")
+                with open(os.path.join(args.out, name + ".json"), "w") as f:
+                    json.dump(art, f, indent=1, default=str)
+                jax.clear_caches()
+    print(f"dry-run done: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

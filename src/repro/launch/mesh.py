@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+initialization, and tests/benches must keep seeing 1 device.
+
+Topology (TPU v5e target):
+  single-pod: (data=16, model=16)          = 256 chips
+  multi-pod:  (pod=2, data=16, model=16)   = 512 chips
+
+``model`` is the innermost axis -> maps to the fastest ICI ring; ``pod``
+is outermost -> crosses the slower inter-pod links (DCI).  Batch shards
+over ("pod", "data") so only gradient reduction crosses pods (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """A tiny mesh over the real local devices (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

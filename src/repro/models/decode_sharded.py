@@ -1,0 +1,115 @@
+"""Distributed decode attention: sequence-sharded KV cache + stat merge.
+
+The decode-step profile (§Perf cell 3) showed GSPMD gathering f32 cache
+chunks across the model axis every (layer x kv-chunk) when the cache
+shards on head_dim (the only shardable dim for MQA archs like granite).
+The scalable structure shards the cache on the *sequence* dim instead:
+
+  * each model shard owns a contiguous S/n_model slice of the cache with
+    full head_dim — the new token's K/V is written only by the owning
+    shard (a masked in-place update);
+  * each shard attends over its local slice, producing an *unnormalized*
+    accumulator plus online-softmax row stats (m, l);
+  * shards merge with one tiny all-gather of (o_partial, m, l) —
+    O(B x H x D) bytes per layer instead of O(B x S x D) cache gathers.
+
+This is the flash-attention merge rule applied across devices (tree
+attention); forward-only, so no custom VJP is needed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .flash_attention import _gqa_scores, _gqa_combine
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _local_attend_stats(q, k, v, kv_len_local, softcap: float):
+    """One-token attention over the local cache slice, unnormalized.
+
+    q: (B, Hq, 1, D); k/v: (B, Hkv, S_loc, D); kv_len_local: scalar.
+    Returns (acc (B, Hq, 1, D) f32, m (B, Hq, 1) f32, l (B, Hq, 1) f32)."""
+    D = q.shape[-1]
+    s = _gqa_scores(q * (D ** -0.5), k)            # (B, Hq, 1, S_loc) f32
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = jnp.arange(k.shape[2])
+    s = jnp.where((pos < kv_len_local)[None, None, None, :], s, NEG)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where((pos < kv_len_local)[None, None, None, :], p, 0.0)
+    l = p.sum(axis=-1)
+    acc = _gqa_combine(p.astype(v.dtype), v)       # f32 accumulate
+    return acc, m, l
+
+
+def decode_attention_update_sharded(q, k_cache, v_cache, new_k, new_v,
+                                    vlen, slot, mesh, *,
+                                    softcap: float = 0.0):
+    """Sharded decode: cache update + attention + merge, one shard_map.
+
+    q/new_k/new_v: (B, H*, 1, D); caches: (B, Hkv, S, D) sharded on S over
+    ``model``; ``vlen``: scalar count of valid cache slots *after* the
+    update (cur_len+1, or min(cur_len+1, W) for ring buffers); ``slot``:
+    scalar write position (cur_len, or cur_len % W for rings).
+    Returns (o (B, Hq, 1, D), new_k_cache, new_v_cache)."""
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ba = ba if len(ba) != 1 else ba[0]
+    B, S = k_cache.shape[0], k_cache.shape[2]
+    n_model = mesh.shape["model"]
+    s_loc = S // n_model
+    b_ax = ba if B % _axes_size(mesh, ba) == 0 else None
+
+    def body(q_l, kc, vc, nk, nv, vlen_g, slot_g):
+        i = jax.lax.axis_index("model")
+        lo = i * s_loc
+        slot_l = jnp.clip(slot_g - lo, 0, s_loc - 1)
+        owned = (slot_g >= lo) & (slot_g < lo + s_loc)
+        # write the new token only on the owning shard (masked update:
+        # non-owners re-write the existing value at slot_l)
+        cur_k = jax.lax.dynamic_slice_in_dim(kc, slot_l, 1, axis=2)
+        cur_v = jax.lax.dynamic_slice_in_dim(vc, slot_l, 1, axis=2)
+        up_k = jnp.where(owned, nk.astype(kc.dtype), cur_k)
+        up_v = jnp.where(owned, nv.astype(vc.dtype), cur_v)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, up_k, slot_l, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, up_v, slot_l, axis=2)
+
+        kv_len_local = jnp.clip(vlen_g - lo, 0, s_loc)
+        acc, m, l = _local_attend_stats(q_l, kc, vc, kv_len_local, softcap)
+
+        # merge across the model axis: tiny all-gather of (acc, m, l)
+        acc_all = jax.lax.all_gather(acc, "model")   # (n, B, Hq, 1, D)
+        m_all = jax.lax.all_gather(m, "model")       # (n, B, Hq, 1)
+        l_all = jax.lax.all_gather(l, "model")
+        m_g = m_all.max(axis=0)
+        w = jnp.exp(m_all - m_g[None])               # (n, B, Hq, 1)
+        denom = (l_all * w).sum(axis=0)
+        num = (acc_all * w[..., None]).sum(axis=0)
+        o = num / jnp.maximum(denom, 1e-30)[..., None]
+        return o.astype(vc.dtype), kc, vc
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(b_ax, None, None, None),          # q
+                  P(b_ax, None, "model", None),       # k cache
+                  P(b_ax, None, "model", None),       # v cache
+                  P(b_ax, None, None, None),          # new k
+                  P(b_ax, None, None, None),          # new v
+                  P(), P()),
+        out_specs=(P(b_ax, None, None, None),
+                   P(b_ax, None, "model", None),
+                   P(b_ax, None, "model", None)),
+        check_rep=False,
+    )(q, k_cache, v_cache, new_k, new_v, vlen, slot)
+
+
+def _axes_size(mesh, ba):
+    n = 1
+    for a in (ba if isinstance(ba, tuple) else (ba,)):
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,349 @@
+"""Recurrent sequence mixers: RG-LRU (RecurrentGemma/Griffin), sLSTM and
+mLSTM (xLSTM).  Each mixer exposes:
+
+  *_init(rng, ...)                       -> params
+  *_apply(params, x, ...)                -> (y, final_state)   # full sequence
+  *_step(params, x_t, state, ...)        -> (y_t, state)       # decode
+
+Training/prefill paths are parallel where the math allows it: RG-LRU uses
+``associative_scan`` (log-depth linear recurrence), mLSTM uses a chunkwise
+parallel form (intra-chunk matmuls + inter-chunk state scan) validated
+against the sequential reference; sLSTM is inherently sequential (state-
+dependent nonlinearity) and uses ``lax.scan`` — all O(1)-state, which is why
+these architectures run the ``long_500k`` shape (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import F32
+
+# --------------------------------------------------------------------------
+# RG-LRU (Griffin)
+# --------------------------------------------------------------------------
+
+RGLRU_C = 8.0
+CONV_WIDTH = 4
+
+
+def rglru_init(rng, d_model: int, d_rnn: int, dtype=jnp.float32):
+    ks = jax.random.split(rng, 8)
+    s = d_model ** -0.5
+    return {
+        "w_in": jax.random.normal(ks[0], (d_model, d_rnn), dtype) * s,
+        "w_gate_in": jax.random.normal(ks[1], (d_model, d_rnn), dtype) * s,
+        "conv_w": jax.random.normal(ks[2], (CONV_WIDTH, d_rnn), dtype) * 0.1,
+        "conv_b": jnp.zeros((d_rnn,), dtype),
+        "w_a": jax.random.normal(ks[3], (d_rnn, d_rnn), dtype) * s,
+        "b_a": jnp.zeros((d_rnn,), dtype),
+        "w_x": jax.random.normal(ks[4], (d_rnn, d_rnn), dtype) * s,
+        "b_x": jnp.zeros((d_rnn,), dtype),
+        # Lambda init so a ~ U(0.9, 0.999)-ish (Griffin appendix)
+        "lam": jax.random.uniform(ks[5], (d_rnn,), dtype, 2.0, 6.0),
+        "w_out": jax.random.normal(ks[6], (d_rnn, d_model), dtype) * s,
+    }
+
+
+def _rglru_coeffs(params, u, dtype):
+    """u: (..., d_rnn) post-conv inputs -> (a, b) with h = a*h_prev + b."""
+    r = jax.nn.sigmoid((u @ params["w_a"].astype(dtype)
+                        + params["b_a"].astype(dtype)).astype(F32))
+    i = jax.nn.sigmoid((u @ params["w_x"].astype(dtype)
+                        + params["b_x"].astype(dtype)).astype(F32))
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"].astype(F32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (
+        i * u.astype(F32))
+    return a, b
+
+
+def _causal_conv(params, x, conv_state=None):
+    """Depthwise causal conv, width 4.  x: (B, T, d)."""
+    w = params["conv_w"].astype(x.dtype)  # (W, d)
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], CONV_WIDTH - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, j: j + x.shape[1], :] * w[CONV_WIDTH - 1 - j]
+        for j in range(CONV_WIDTH)
+    ) + params["conv_b"].astype(x.dtype)
+    new_state = xp[:, -(CONV_WIDTH - 1):, :]
+    return out, new_state
+
+
+def rglru_apply(params, x, *, dtype, h0=None, conv_state=None):
+    """Full-sequence RG-LRU block.  x: (B, T, d_model)."""
+    gate = jax.nn.gelu((x @ params["w_gate_in"].astype(dtype)).astype(F32),
+                       approximate=True)
+    u = x @ params["w_in"].astype(dtype)
+    u, conv_state = _causal_conv(params, u, conv_state)
+    a, b = _rglru_coeffs(params, u, dtype)
+    if h0 is not None:
+        # fold the carried state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h * gate).astype(dtype) @ params["w_out"].astype(dtype)
+    return y.astype(x.dtype), {"h": h[:, -1], "conv": conv_state}
+
+
+def rglru_step(params, x_t, state, *, dtype):
+    """Single decode step.  x_t: (B, d_model)."""
+    gate = jax.nn.gelu((x_t @ params["w_gate_in"].astype(dtype)).astype(F32),
+                       approximate=True)
+    u = x_t @ params["w_in"].astype(dtype)
+    u, conv_state = _causal_conv(params, u[:, None, :], state["conv"])
+    u = u[:, 0]
+    a, b = _rglru_coeffs(params, u, dtype)
+    h = a * state["h"] + b
+    y = (h * gate).astype(dtype) @ params["w_out"].astype(dtype)
+    return y.astype(x_t.dtype), {"h": h, "conv": conv_state}
+
+
+def rglru_init_state(batch: int, d_rnn: int):
+    return {"h": jnp.zeros((batch, d_rnn), F32),
+            "conv": jnp.zeros((batch, CONV_WIDTH - 1, d_rnn), F32)}
+
+
+# --------------------------------------------------------------------------
+# mLSTM (xLSTM) — matrix memory with exponential gating
+# --------------------------------------------------------------------------
+
+def mlstm_init(rng, d_model: int, n_heads: int, dtype=jnp.float32):
+    ks = jax.random.split(rng, 7)
+    s = d_model ** -0.5
+    d_in = 2 * d_model  # up-projection factor 2 (xLSTM block)
+    return {
+        "w_up": jax.random.normal(ks[0], (d_model, 2 * d_in), dtype) * s,
+        "w_q": jax.random.normal(ks[1], (d_in, d_in), dtype) * s,
+        "w_k": jax.random.normal(ks[2], (d_in, d_in), dtype) * s,
+        "w_v": jax.random.normal(ks[3], (d_in, d_in), dtype) * s,
+        "w_if": jax.random.normal(ks[4], (d_in, 2 * n_heads), dtype) * s,
+        "b_if": jnp.zeros((2 * n_heads,), dtype),
+        "w_down": jax.random.normal(ks[5], (d_in, d_model), dtype) * s,
+    }
+
+
+def _mlstm_qkvg(params, x, n_heads: int, dtype):
+    up = x @ params["w_up"].astype(dtype)
+    u, z = jnp.split(up, 2, axis=-1)          # value path, gate path
+    B, T, d_in = u.shape
+    dh = d_in // n_heads
+
+    def heads(w):
+        return (u @ w.astype(dtype)).reshape(B, T, n_heads, dh).transpose(
+            0, 2, 1, 3)
+
+    q = heads(params["w_q"]) * (dh ** -0.5)
+    k = heads(params["w_k"]) * (dh ** -0.5)
+    v = heads(params["w_v"])
+    gates = (u @ params["w_if"].astype(dtype)
+             + params["b_if"].astype(dtype)).astype(F32)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)  # (B, T, H)
+    i_pre = i_pre.transpose(0, 2, 1)             # (B, H, T)
+    f_pre = jax.nn.log_sigmoid(f_pre.transpose(0, 2, 1))
+    return q, k, v, i_pre, f_pre, z
+
+
+def mlstm_seq_ref(params, x, n_heads: int, *, dtype):
+    """Sequential reference (oracle for the chunkwise path)."""
+    q, k, v, i_pre, f_pre, z = _mlstm_qkvg(params, x, n_heads, dtype)
+    B, H, T, dh = q.shape
+    C0 = jnp.zeros((B, H, dh, dh), F32)
+    n0 = jnp.zeros((B, H, dh), F32)
+    m0 = jnp.full((B, H), -1e30, F32)
+
+    def step(carry, t):
+        C, n, m = carry
+        it, ft = i_pre[:, :, t], f_pre[:, :, t]
+        m_new = jnp.maximum(ft + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(ft + m - m_new)
+        kt = k[:, :, t].astype(F32)
+        vt = v[:, :, t].astype(F32)
+        qt = q[:, :, t].astype(F32)
+        C = f_s[..., None, None] * C + i_s[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :])
+        n = f_s[..., None] * n + i_s[..., None] * kt
+        num = jnp.einsum("bhde,bhe->bhd", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    (_, _, _), hs = jax.lax.scan(step, (C0, n0, m0), jnp.arange(T))
+    hs = hs.transpose(1, 2, 0, 3).reshape(B, H, T, dh)  # (B,H,T,dh)
+    return _mlstm_out(params, hs, z, x, dtype)
+
+
+def _mlstm_out(params, hs, z, x, dtype):
+    B, H, T, dh = hs.shape
+    h = hs.transpose(0, 2, 1, 3).reshape(B, T, H * dh).astype(dtype)
+    y = (h * jax.nn.silu(z.astype(F32)).astype(dtype)) @ params[
+        "w_down"].astype(dtype)
+    return y.astype(x.dtype)
+
+
+def mlstm_apply(params, x, n_heads: int, *, dtype, chunk: int = 128,
+                state=None):
+    """Chunkwise-parallel mLSTM.  x: (B, T, d_model)."""
+    q, k, v, i_pre, f_pre, z = _mlstm_qkvg(params, x, n_heads, dtype)
+    B, H, T, dh = q.shape
+    C = min(chunk, T)
+    if T % C:
+        raise ValueError(f"T={T} must be a multiple of chunk={C}")
+    nC = T // C
+
+    def resh(a):  # (B,H,T,...) -> (nC, B, H, C, ...)
+        return a.reshape(B, H, nC, C, *a.shape[3:]).transpose(
+            2, 0, 1, 3, *range(4, a.ndim + 1))
+
+    qc, kc, vc = resh(q.astype(F32)), resh(k.astype(F32)), resh(v.astype(F32))
+    ic = i_pre.reshape(B, H, nC, C).transpose(2, 0, 1, 3)   # (nC,B,H,C)
+    fc = f_pre.reshape(B, H, nC, C).transpose(2, 0, 1, 3)
+
+    if state is None:
+        C_st = jnp.zeros((B, H, dh, dh), F32)
+        n_st = jnp.zeros((B, H, dh), F32)
+        m_st = jnp.full((B, H), -1e30, F32)
+    else:
+        C_st, n_st, m_st = state["C"], state["n"], state["m"]
+
+    def chunk_step(carry, inp):
+        # Derivation: unrolling the stabilized recurrence gives
+        #   C_t = sum_{s<=t} exp(F_t - F_s + i_s - m_t) v_s k_s^T
+        # with F = inclusive cumsum of log-forget.  Per row t the varying
+        # part over s is g_s = i_s - F_s, so the row stabilizer is
+        #   m_t = F_t + max(m_prev, max_{s<=t} g_s).
+        C_st, n_st, m_st = carry
+        qb, kb, vb, ib, fb = inp   # (B,H,C,dh) / (B,H,C)
+        Fcum = jnp.cumsum(fb, axis=-1)                  # (B,H,C) inclusive
+        g = ib - Fcum                                   # g_s = i_s - F_s
+        g_run = jax.lax.associative_scan(jnp.maximum, g, axis=-1)
+        mx_row = jnp.maximum(m_st[..., None], g_run)    # (B,H,C)
+        m_row = Fcum + mx_row
+        # state contribution, scaled exp(m_st + F_t - m_row) = exp(m_st-mx)
+        st_scale = jnp.exp(m_st[..., None] - mx_row)    # (B,H,C)
+        num_state = jnp.einsum("bhde,bhce->bhcd", C_st, qb) \
+            * st_scale[..., None]
+        den_state = jnp.einsum("bhd,bhcd->bhc", n_st, qb) * st_scale
+        # intra-chunk: D[t,s] = F_t + g_s - m_row[t]  (s <= t)
+        D = (Fcum[..., :, None] + g[..., None, :] - m_row[..., :, None])
+        tri = jnp.tril(jnp.ones((C, C), bool))
+        D = jnp.where(tri, D, -1e30)
+        W = jnp.exp(D)                                  # (B,H,C,C)
+        scores = jnp.einsum("bhcd,bhsd->bhcs", qb, kb) * W
+        num_intra = jnp.einsum("bhcs,bhsd->bhcd", scores, vb)
+        den_intra = scores.sum(axis=-1)
+        num = num_state + num_intra
+        den = den_state + den_intra
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_row))[..., None]
+
+        # chunk-end state update, stabilized at m_new = F_end + mx_end
+        F_end = Fcum[..., -1]
+        mx_end = jnp.maximum(m_st, g_run[..., -1])
+        m_new = F_end + mx_end
+        s_state = jnp.exp(m_st - mx_end)
+        s_in = jnp.exp(g - mx_end[..., None])           # (B,H,C)
+        C_st = s_state[..., None, None] * C_st + jnp.einsum(
+            "bhsd,bhse,bhs->bhde", vb, kb, s_in)
+        n_st = s_state[..., None] * n_st + jnp.einsum(
+            "bhsd,bhs->bhd", kb, s_in)
+        return (C_st, n_st, m_new), h
+
+    (C_st, n_st, m_st), hs = jax.lax.scan(
+        chunk_step, (C_st, n_st, m_st), (qc, kc, vc, ic, fc))
+    hs = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, T, dh)
+    y = _mlstm_out(params, hs, z, x, dtype)
+    return y, {"C": C_st, "n": n_st, "m": m_st}
+
+
+def mlstm_step(params, x_t, state, n_heads: int, *, dtype):
+    """Single decode step.  x_t: (B, d_model)."""
+    y, new_state = mlstm_apply(params, x_t[:, None, :], n_heads, dtype=dtype,
+                               chunk=1, state=state)
+    return y[:, 0], new_state
+
+
+def mlstm_init_state(batch: int, n_heads: int, d_model: int):
+    dh = (2 * d_model) // n_heads
+    return {"C": jnp.zeros((batch, n_heads, dh, dh), F32),
+            "n": jnp.zeros((batch, n_heads, dh), F32),
+            "m": jnp.full((batch, n_heads), -1e30, F32)}
+
+
+# --------------------------------------------------------------------------
+# sLSTM (xLSTM) — scalar memory, state-dependent gating (sequential)
+# --------------------------------------------------------------------------
+
+def slstm_init(rng, d_model: int, n_heads: int, dtype=jnp.float32):
+    ks = jax.random.split(rng, 3)
+    s = d_model ** -0.5
+    dh = d_model // n_heads
+    return {
+        "w": jax.random.normal(ks[0], (d_model, 4 * d_model), dtype) * s,
+        "r": jax.random.normal(ks[1], (n_heads, dh, 4 * dh), dtype) * s,
+        "b": jnp.zeros((4 * d_model,), dtype),
+        "w_out": jax.random.normal(ks[2], (d_model, d_model), dtype) * s,
+    }
+
+
+def _slstm_cell(params, wx_t, state, n_heads: int):
+    """wx_t: (B, 4*d) precomputed input proj; state dict of (B,H,dh)."""
+    h, c, n, m = state["h"], state["c"], state["n"], state["m"]
+    B = wx_t.shape[0]
+    H = n_heads
+    dh = h.shape[-1]
+    rec = jnp.einsum("bhd,hde->bhe", h, params["r"].astype(F32))  # (B,H,4dh)
+    pre = wx_t.reshape(B, H, 4 * dh).astype(F32) + rec
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    f_log = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(f_log + m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(f_log + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(z_pre)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1.0)
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_apply(params, x, n_heads: int, *, dtype, state=None):
+    """x: (B, T, d_model) -> (y, state).  Sequential scan over T."""
+    B, T, d = x.shape
+    dh = d // n_heads
+    if state is None:
+        state = slstm_init_state(B, n_heads, d)
+    wx = x @ params["w"].astype(dtype) + params["b"].astype(dtype)
+
+    def step(st, wx_t):
+        st = _slstm_cell(params, wx_t, st, n_heads)
+        return st, st["h"]
+
+    state, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2))
+    # hs: (T, B, H, dh) -> (B, T, d)
+    y = hs.transpose(1, 0, 2, 3).reshape(B, T, d).astype(dtype) @ params[
+        "w_out"].astype(dtype)
+    return y.astype(x.dtype), state
+
+
+def slstm_step(params, x_t, state, n_heads: int, *, dtype):
+    wx = x_t @ params["w"].astype(dtype) + params["b"].astype(dtype)
+    state = _slstm_cell(params, wx, state, n_heads)
+    B, d = x_t.shape
+    y = state["h"].reshape(B, d).astype(dtype) @ params["w_out"].astype(dtype)
+    return y.astype(x_t.dtype), state
+
+
+def slstm_init_state(batch: int, n_heads: int, d_model: int):
+    dh = d_model // n_heads
+    z = lambda: jnp.zeros((batch, n_heads, dh), F32)
+    return {"h": z(), "c": z(), "n": z(),
+            "m": jnp.full((batch, n_heads, dh), -1e30, F32)}

@@ -1,0 +1,2 @@
+from .adamw import adamw, clip_by_global_norm  # noqa: F401
+from .schedules import cosine_schedule, linear_warmup  # noqa: F401

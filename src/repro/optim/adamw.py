@@ -1,0 +1,104 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Implemented as pure pytree transforms (no optax dependency) so the optimizer
+state inherits the parameter sharding verbatim: under FSDP the first/second
+moments are sharded exactly like the weights (ZeRO-1 for free), which the
+dry-run verifies by lowering ``train_step`` with optimizer state in the
+carry.  Moments are kept in f32 regardless of the parameter dtype (mixed-
+precision master-moment convention).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0          # 0 disables clipping
+    # parameters whose path contains one of these substrings skip decay
+    no_decay_substrings: tuple = ("norm", "bias", "b_", "lam")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def adamw_init(params):
+    """Zero moments shaped like params (f32), plus the step counter."""
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, F32) if hasattr(p, "shape") else p,
+        params)
+    return {"mu": zeros,
+            "nu": jax.tree_util.tree_map(jnp.copy, zeros),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Clip a gradient pytree to a maximum global L2 norm.
+
+    Returns (clipped_grads, pre_clip_norm)."""
+    sq = jax.tree_util.tree_reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(F32))), grads,
+        jnp.zeros((), F32))
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.where(gnorm > max_norm, max_norm / jnp.maximum(gnorm, 1e-12),
+                      1.0)
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(F32) * scale).astype(g.dtype), grads), gnorm
+
+
+def adamw(params, grads, state, cfg: AdamWConfig,
+          lr: jnp.ndarray | float | None = None):
+    """One AdamW update.  Returns (new_params, new_state, metrics).
+
+    ``lr`` overrides cfg.lr (pass the schedule value as a traced scalar so
+    one compiled step serves the whole run).
+    """
+    lr = cfg.lr if lr is None else lr
+    gnorm = jnp.zeros((), F32)
+    if cfg.clip_norm:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+
+    count = state["count"] + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(F32)
+    c2 = 1.0 - cfg.b2 ** count.astype(F32)
+
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    decay_mask = {
+        _path_str(path): not any(s in _path_str(path).lower()
+                                 for s in cfg.no_decay_substrings)
+        for path, _ in flat_p
+    }
+
+    def update(path, p, g, mu, nu):
+        g32 = g.astype(F32)
+        mu = cfg.b1 * mu + (1.0 - cfg.b1) * g32
+        nu = cfg.b2 * nu + (1.0 - cfg.b2) * jnp.square(g32)
+        step = (mu / c1) / (jnp.sqrt(nu / c2) + cfg.eps)
+        if decay_mask.get(_path_str(path), True) and cfg.weight_decay:
+            step = step + cfg.weight_decay * p.astype(F32)
+        return (p.astype(F32) - lr * step).astype(p.dtype), mu, nu
+
+    out = jax.tree_util.tree_map_with_path(
+        update, params, grads, state["mu"], state["nu"])
+    # out leaves are (p, mu, nu) tuples; unzip
+    new_params = jax.tree_util.tree_map(
+        lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree_util.tree_map(
+        lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree_util.tree_map(
+        lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"mu": new_mu, "nu": new_nu, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm}

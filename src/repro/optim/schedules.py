@@ -1,0 +1,21 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int, peak: float):
+    """0 -> peak over ``warmup_steps`` (then flat)."""
+    frac = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+    return peak * frac
+
+
+def cosine_schedule(step, warmup_steps: int, total_steps: int, peak: float,
+                    floor: float = 0.0):
+    """Linear warmup then cosine decay to ``floor`` at ``total_steps``."""
+    step = step.astype(jnp.float32)
+    warm = linear_warmup(step, warmup_steps, peak)
+    prog = jnp.clip((step - warmup_steps)
+                    / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup_steps, warm, cos)

@@ -1,0 +1,4 @@
+from .sharding import (  # noqa: F401
+    batch_axes, cache_pspecs, opt_pspecs, param_pspecs, ShardingRules,
+)
+from .steps import make_decode_step, make_prefill_step, make_train_step  # noqa: F401

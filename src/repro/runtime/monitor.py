@@ -1,0 +1,73 @@
+"""Step-time tracking and straggler detection.
+
+At 1000+ node scale, synchronous SPMD training is gated by the slowest
+worker every step.  The mitigation stack implemented/documented here:
+
+  1. **Detection** (implemented): per-step wall-time EWMA + robust z-score
+     (median/MAD window).  A step slower than ``threshold`` MADs raises a
+     straggler alarm with the offending step's stats.
+  2. **In-job mitigation** (implemented): the trainer reacts to alarms by
+     checkpointing eagerly (cheap, async) so a kill/replace loses nothing.
+  3. **Replacement** (documented, needs a cluster scheduler): synchronous
+     training with hot spares — the alarm triggers the scheduler to swap the
+     slow host and the job auto-resumes from the last checkpoint on the new
+     mesh (elastic restore supports a different host count; see
+     ``checkpoint.manager``).
+
+This is host-side instrumentation (wall clock), so it works identically on
+CPU and real pods.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+
+@dataclass
+class StepStats:
+    step: int
+    seconds: float
+    z: float
+    is_straggler: bool
+
+
+@dataclass
+class StragglerMonitor:
+    window: int = 50
+    threshold_mads: float = 6.0
+    min_samples: int = 10
+    ewma_alpha: float = 0.05
+    _times: deque = field(default_factory=lambda: deque(maxlen=200))
+    _ewma: float = 0.0
+    _t0: float = 0.0
+    alarms: list = field(default_factory=list)
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> StepStats:
+        dt = time.perf_counter() - self._t0
+        window = list(self._times)[-self.window:]
+        if len(window) >= self.min_samples:
+            srt = sorted(window)
+            med = srt[len(srt) // 2]
+            mad = sorted(abs(x - med) for x in window)[len(window) // 2]
+            z = (dt - med) / max(mad, 1e-6)
+        else:
+            z = 0.0
+        is_straggler = (len(window) >= self.min_samples
+                        and z > self.threshold_mads)
+        self._times.append(dt)
+        self._ewma = (dt if self._ewma == 0.0
+                      else (1 - self.ewma_alpha) * self._ewma
+                      + self.ewma_alpha * dt)
+        stats = StepStats(step=step, seconds=dt, z=z,
+                          is_straggler=is_straggler)
+        if is_straggler:
+            self.alarms.append(stats)
+        return stats
+
+    @property
+    def ewma_seconds(self) -> float:
+        return self._ewma

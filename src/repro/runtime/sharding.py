@@ -1,0 +1,224 @@
+"""Sharding rules: logical parameter/activation/cache axes -> mesh axes.
+
+MaxText-style rules table, applied by *path + rank* over the parameter
+pytree (the model is pure pytrees, no flax metadata).  The production mesh
+is ``(data=16, model=16)`` per pod, with an optional leading ``pod`` axis;
+the policy (DESIGN.md §5):
+
+  * 2-D weights: input/embed dim -> ``data`` (FSDP; all-gathered at use,
+    gradients reduce-scattered), output/heads/ffn/vocab dim -> ``model``
+    (Megatron TP).  Output projections (``wo``-like) are transposed in the
+    table so the TP axis stays on the contracted dim.
+  * MoE expert weights: experts -> ``model`` (EP), embed dim -> ``data``
+    (FSDP); the per-layer shard_map all-to-all does the token exchange.
+  * batch -> ``("pod", "data")`` (pod folds into DP); weight collectives
+    stay intra-pod (ICI), only grad reduction crosses pods (DCI).
+  * KV caches: batch -> data; kv-heads -> model when divisible, else the
+    head_dim -> model (MQA/GQA archs with few kv heads, e.g. granite kv=1).
+  * Scan-stacked leaves (a leading ``n_units``/``n_enc_layers`` dim) get a
+    prepended None.
+  * A dim is sharded only when divisible by the axis size — otherwise the
+    rule degrades to replication for that dim (recorded per-arch in the
+    dry-run artifacts as ``padded_dims``).
+
+Sharding of ``CompressedTensor`` leaves (ECF8 serving): the flattened chunk
+axis of the payload is itself the flattened weight element order, so
+sharding chunks over ``model`` shards the decoded weight over its leading
+dim; signmant/codes shard likewise.  Decode tables (<= 16 entries) replicate.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def batch_axes(mesh: Mesh):
+    """Mesh axes the global batch shards over ('pod' folds into DP)."""
+    ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return ax if len(ax) != 1 else ax[0]
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, spec_dims, shape):
+    """Drop axes that don't divide their dim (replicate those dims)."""
+    out = []
+    for dim, axis in zip(shape, spec_dims):
+        if axis is not None and dim % _axis_size(mesh, axis) == 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# parameter-name -> (spec for the *unstacked* shape), rank-dispatched
+_IN_OUT = ("wq", "wk", "wv", "wi", "wi_gate", "wi_up", "w_in", "w_gate_in",
+           "w_up", "w_q", "w_k", "w_v", "w_if", "w", "w_a", "w_x")
+_OUT_IN = ("wo", "w_out", "w_down")
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Knobs for the hillclimb loop (see EXPERIMENTS.md §Perf)."""
+
+    # residual-stream constraint between scan units:
+    #   "none"  -> let GSPMD propagate
+    #   "seq"   -> (batch, seq->model, None): GSPMD sequence parallelism
+    #   "dmodel"-> (batch, None, d->model)
+    activation_partitioning: str = "seq"
+    # shard embed/unembed vocab dim over model (vocab TP)
+    vocab_tp: bool = True
+    # shard expert weights' d_model dim over data (FSDP on experts)
+    expert_fsdp: bool = True
+    # serving: replicate weights over the data axes (pure TP) — decode
+    # steps re-gather FSDP-sharded weights for every generated token,
+    # which dominates the decode collective term (§Perf cell 3)
+    serve_tp: bool = False
+
+
+DEFAULT_RULES = ShardingRules()
+
+
+def _param_rule(path_keys, shape, mesh: Mesh, rules: ShardingRules) -> P:
+    names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path_keys]
+    name = names[-1]
+    rank = len(shape)
+    stacked = int("units" in names or "layers" in names)
+    base_rank = rank - stacked
+
+    def done(spec_dims):
+        if rules.serve_tp:  # pure TP: drop the FSDP (data) axis
+            spec_dims = tuple(None if d == "data" else d
+                              for d in spec_dims)
+        return _fit(mesh, (None,) * stacked + tuple(spec_dims), shape)
+
+    if name == "embed":
+        return done(("model" if rules.vocab_tp else None, "data"))
+    if name == "unembed":
+        return done(("data", "model" if rules.vocab_tp else None))
+    if name == "pos_embed":
+        return done((None, "data"))
+    if base_rank <= 1:
+        return done((None,) * base_rank)  # norms, biases, lam: replicate
+
+    in_moe = "moe" in names and "shared" not in names
+    if in_moe:
+        d_ax = "data" if rules.expert_fsdp else None
+        if name == "gate":
+            return done(("data", None))
+        if name in ("wi_gate", "wi_up"):
+            return done(("model", d_ax, None))
+        if name == "wo":
+            return done(("model", None, d_ax))
+
+    if name == "r" and base_rank == 3:       # slstm recurrent: (H, dh, 4dh)
+        return done(("model", None, None))
+    if name == "conv_w":
+        return done((None, "model"))
+    if name in _OUT_IN:
+        return done(("model", "data"))
+    if name in _IN_OUT:
+        return done(("data", "model"))
+    # compressed-container children (payload/codes/signmant/escapes/tables)
+    if name in ("payload", "codes", "signmant", "escapes"):
+        return _fit(mesh, (None,) * stacked + ("model",)
+                    + (None,) * (base_rank - 1), shape)
+    if name in ("lj_limit", "first_lj", "offset", "perm", "table"):
+        return P(*(None,) * rank)
+    # default: replicate
+    return P(*(None,) * rank)
+
+
+def param_pspecs(cfg: ArchConfig, params, mesh: Mesh,
+                 rules: ShardingRules = DEFAULT_RULES):
+    """PartitionSpec pytree matching ``params`` (arrays or ShapeDtypeStructs).
+
+    Works on CompressedTensor-bearing trees too (they flatten to arrays)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [_param_rule(path, leaf.shape, mesh, rules)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _cache_leaf_rule(path_keys, shape, cfg: ArchConfig, mesh: Mesh):
+    names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path_keys]
+    name = names[-1]
+    ba = batch_axes(mesh)
+    stacked = int("units" in names)
+    rank = len(shape)
+    base_rank = rank - stacked
+    if name == "cur_len":
+        return P()
+    if name in ("k", "v") and base_rank == 4:
+        # (B, Hkv, S, hd): self-attention caches shard the *sequence* over
+        # model (decode_sharded merges shard stats — §Perf cell 3); cross
+        # caches (whisper, S=1500 indivisible) fall back to heads/head_dim
+        S = shape[stacked + 2]
+        if "cross" not in names and S % mesh.shape["model"] == 0:
+            spec = (ba, None, "model", None)
+        elif shape[stacked + 1] % mesh.shape["model"] == 0:
+            spec = (ba, "model", None, None)
+        else:
+            spec = (ba, None, None, "model")
+        return _fit(mesh, (None,) * stacked + spec, shape)
+    # recurrent states / conv states: batch plus feature -> model where big
+    if base_rank >= 1:
+        spec = [ba] + [None] * (base_rank - 1)
+        if base_rank >= 2 and shape[-1] >= 1024:
+            spec[-1] = "model"
+        return _fit(mesh, (None,) * stacked + tuple(spec), shape)
+    return P(*(None,) * rank)
+
+
+def cache_pspecs(cfg: ArchConfig, cache, mesh: Mesh):
+    """PartitionSpec pytree for a decode cache pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = [_cache_leaf_rule(path, leaf.shape, cfg, mesh)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_pspecs(param_specs):
+    """Optimizer-state specs: moments inherit the parameter sharding."""
+    return {"mu": param_specs, "nu": param_specs, "count": P()}
+
+
+def named(mesh: Mesh, tree_of_pspecs):
+    """P -> NamedSharding pytree (leaves are PartitionSpec)."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def make_constrainer(mesh: Mesh, rules: ShardingRules):
+    """Residual-stream sharding constraint applied between scan units."""
+    ba = batch_axes(mesh)
+    mode = rules.activation_partitioning
+
+    def constrain(x):
+        if mode == "none" or mesh is None:
+            return x
+        if mode == "seq" and x.ndim == 3 and x.shape[1] > 1 and (
+                x.shape[1] % mesh.shape["model"] == 0):
+            spec = P(ba, "model", None)
+        elif mode == "dmodel" and x.ndim == 3 and (
+                x.shape[2] % mesh.shape["model"] == 0):
+            spec = P(ba, None, "model")
+        else:
+            spec = P(ba, *(None,) * (x.ndim - 1))
+        if x.shape[0] % _axis_size(mesh, spec[0] if spec else None) != 0:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain

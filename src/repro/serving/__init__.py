@@ -1,0 +1,2 @@
+from .sampler import greedy, sample_logits  # noqa: F401
+from .engine import GenerationEngine, Request  # noqa: F401

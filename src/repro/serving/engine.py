@@ -1,0 +1,141 @@
+"""Continuous-batching generation engine (the serving driver).
+
+The paper's RQ2 regime: weight-streaming-bound batched decode under a fixed
+memory budget — ECF8's smaller weights buy a bigger batch, and the batch is
+what buys throughput.  The engine keeps a fixed (max_batch, max_len) cache
+(static shapes: one compiled decode step serves the whole run) and fills it
+with requests continuously:
+
+  * every slot has its own timeline (per-slot ``cur_len``, see
+    ``model.init_cache(per_slot=True)``) — a finished request's slot is
+    immediately reused by the next queued request without draining the batch;
+  * a new request is prefilled as a single-row batch and its cache fragment
+    is spliced into the batched cache at the free slot (stacked leaves at
+    batch-axis 1, tail leaves at 0);
+  * decode steps always run the full batch; inactive slots compute garbage
+    that is never read (standard static-batch padding trade).
+
+Weights may be an ECF8-compressed pytree (``core.store.compress_tree``) —
+decode-on-use happens inside the same jitted step.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from .sampler import greedy, sample_logits
+
+_ids = itertools.count()
+
+
+@dataclass
+class Request:
+    prompt: list
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    id: int = field(default_factory=lambda: next(_ids))
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+def _splice(full, frag, slot: int, path_names):
+    """Insert a single-request cache fragment at ``slot`` of the batch."""
+    axis = 1 if "units" in path_names else 0
+    if "cur_len" in path_names:
+        return full.at[slot].set(frag)
+    return jax.lax.dynamic_update_slice_in_dim(
+        full, frag.astype(full.dtype), slot, axis=axis)
+
+
+class GenerationEngine:
+    def __init__(self, params, cfg: ArchConfig, *, max_batch: int = 8,
+                 max_len: int = 512, mesh=None, rng_seed: int = 0):
+        self.params, self.cfg = params, cfg
+        self.max_batch, self.max_len = max_batch, max_len
+        self.mesh = mesh
+        self.queue: deque = deque()
+        self.slots: list = [None] * max_batch   # Request or None
+        self.cache = M.init_cache(cfg, max_batch, max_len,
+                                  dtype=jnp.dtype(cfg.dtype), per_slot=True)
+        self.rng = jax.random.PRNGKey(rng_seed)
+        self._decode = jax.jit(
+            lambda p, t, c: M.decode_step(p, cfg, t, c, mesh=mesh))
+        self._prefill = jax.jit(
+            lambda p, t: M.prefill(p, cfg, t, mesh=mesh, max_len=max_len))
+        self.last_tok = jnp.zeros((max_batch, 1), jnp.int32)
+        self.steps = 0
+
+    # -- scheduling --------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, frag = self._prefill(self.params, toks)
+            flat_full, treedef = jax.tree_util.tree_flatten_with_path(
+                self.cache)
+            flat_frag = jax.tree_util.tree_flatten(frag)[0]
+            new_leaves = []
+            for (path, full), fr in zip(flat_full, flat_frag):
+                names = [str(getattr(k, "key", getattr(k, "idx", k)))
+                         for k in path]
+                new_leaves.append(_splice(full, fr, slot, names))
+            self.cache = jax.tree_util.tree_unflatten(treedef, new_leaves)
+            tok = self._sample_one(logits, req)
+            req.out_tokens.append(int(tok))
+            self.last_tok = self.last_tok.at[slot, 0].set(tok)
+            self.slots[slot] = req
+
+    def _sample_one(self, logits, req: Request):
+        if req.temperature <= 0:
+            return greedy(logits)[0, 0]
+        self.rng, k = jax.random.split(self.rng)
+        return sample_logits(logits, k, temperature=req.temperature)[0, 0]
+
+    # -- stepping ----------------------------------------------------------
+
+    def step(self) -> bool:
+        """Admit + one batched decode step.  Returns False when idle."""
+        self._admit()
+        active = [s for s in range(self.max_batch)
+                  if self.slots[s] is not None]
+        if not active:
+            return bool(self.queue)
+        logits, self.cache = self._decode(self.params, self.last_tok,
+                                          self.cache)
+        self.steps += 1
+        toks = np.asarray(greedy(logits))  # (B, 1)
+        self.rng, k = jax.random.split(self.rng)
+        sampled = np.asarray(sample_logits(logits, k, temperature=1.0))
+        for s in active:
+            req = self.slots[s]
+            t = int(toks[s, 0] if req.temperature <= 0 else sampled[s, 0])
+            req.out_tokens.append(t)
+            self.last_tok = self.last_tok.at[s, 0].set(t)
+            if len(req.out_tokens) >= req.max_new_tokens or (
+                    len(req.prompt) + len(req.out_tokens) >= self.max_len):
+                req.done = True
+                self.slots[s] = None
+        return True
+
+    def run(self, max_steps: int = 10_000) -> list:
+        """Drain the queue; returns the tracked requests (all done unless
+        ``max_steps`` was hit)."""
+        tracked = list(self.queue)
+        for _ in range(max_steps):
+            busy = self.step()
+            if not busy and not any(s is not None for s in self.slots):
+                break
+        return tracked

@@ -1,0 +1,32 @@
+"""Token samplers (pure functions over final-position logits)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits):
+    """logits (B, 1, V) -> (B, 1) int32."""
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+
+
+def sample_logits(logits, rng, *, temperature: float = 1.0,
+                  top_k: int = 0, top_p: float = 0.0):
+    """Temperature / top-k / top-p sampling.  logits (B, 1, V) -> (B, 1)."""
+    x = logits[:, -1, :].astype(jnp.float32)
+    if temperature <= 0.0:
+        return greedy(logits)
+    x = x / temperature
+    if top_k:
+        kth = jax.lax.top_k(x, top_k)[0][..., -1:]
+        x = jnp.where(x < kth, -jnp.inf, x)
+    if top_p:
+        srt = jnp.sort(x, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(srt, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative mass >= top_p
+        cutoff_idx = jnp.argmax(cum >= top_p, axis=-1)
+        cutoff = jnp.take_along_axis(srt, cutoff_idx[:, None], axis=-1)
+        x = jnp.where(x < cutoff, -jnp.inf, x)
+    tok = jax.random.categorical(rng, x, axis=-1)
+    return tok.astype(jnp.int32)[:, None]

@@ -1,0 +1,8 @@
+"""Pytest config.  NOTE: no XLA_FLAGS here — tests must see 1 device;
+multi-device tests spawn subprocesses (test_sharding.py) and only the
+dry-run sets the 512-device flag (launch/dryrun.py)."""
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-minute tests (subprocess compiles, drills)")

@@ -1,0 +1,65 @@
+"""HLO collective parsing + roofline term arithmetic."""
+import numpy as np
+
+from repro.analysis.hlo_parse import collective_bytes, op_histogram
+from repro.analysis.roofline import HW, model_flops, roofline_terms
+from repro.configs import SHAPES, get
+
+HLO = """
+HloModule jit_step
+  %ag = bf16[16,4096,384]{2,1,0} all-gather(%x), replica_groups={{0,1,2,3}}
+  %ar = f32[1024]{0} all-reduce(%y), replica_groups={{0,1}}
+  %rs = bf16[8,128]{1,0} reduce-scatter(%z), replica_groups={{0,1,2,3}}
+  %ags = (bf16[256]{0}, bf16[256]{0}) all-gather-start(%a, %b)
+  %agd = bf16[512]{0} all-gather-done(%ags)
+  %cp = u8[64]{0} collective-permute(%w), replica_groups={{0,1}}
+  %dot = f32[8,8]{1,0} dot(%p, %q)
+"""
+
+
+def test_collective_bytes_parsing():
+    c = collective_bytes(HLO)
+    ag = 16 * 4096 * 384 * 2 + 256 * 2  # big gather + start (largest part)
+    ar = 1024 * 4 * 2.0                 # all-reduce counts 2x
+    rs = 8 * 128 * 2
+    cp = 64
+    np.testing.assert_allclose(c["all-gather"], ag)
+    np.testing.assert_allclose(c["all-reduce"], ar)
+    np.testing.assert_allclose(c["reduce-scatter"], rs)
+    np.testing.assert_allclose(c["collective-permute"], cp)
+    np.testing.assert_allclose(c["total"], ag + ar + rs + cp)
+    assert c["count"] == 5  # ag, ar, rs, ag-start, cp; -done not counted
+
+
+def test_done_not_counted_and_histogram():
+    c = collective_bytes(HLO)
+    assert all(op != "all-gather-done" for op, _, _ in c["ops"])
+    h = op_histogram(HLO)
+    assert h.get("dot") == 1
+
+
+def test_roofline_terms_and_dominance():
+    cfg = get("granite-20b")
+    shape = SHAPES["train_4k"]
+    cost = {"flops": 197e12 * 0.1, "bytes accessed": 819e9 * 0.5}
+    coll = {"total": 50e9 * 0.2}
+    r = roofline_terms(cost, coll, 256, cfg, shape)
+    np.testing.assert_allclose(r["t_compute"], 0.1)
+    np.testing.assert_allclose(r["t_memory"], 0.5)
+    np.testing.assert_allclose(r["t_collective"], 0.2)
+    assert r["dominant"] == "memory"
+    assert 0 < r["useful_flops_ratio"]
+    assert 0 < r["mfu_bound"]
+
+
+def test_model_flops_conventions():
+    cfg = get("moonshot-v1-16b-a3b")
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    pf = model_flops(cfg, SHAPES["prefill_32k"])
+    dc = model_flops(cfg, SHAPES["decode_32k"])
+    # MoE: active < total params in the 6ND count
+    assert cfg.active_param_count() < cfg.param_count()
+    assert tr / (SHAPES["train_4k"].global_batch
+                 * SHAPES["train_4k"].seq_len) == 6.0 * cfg.active_param_count()
+    assert dc == 2.0 * cfg.active_param_count() * 128
+    assert pf > dc

@@ -1,0 +1,129 @@
+"""Fault-tolerance contract: atomic, checksummed, async, elastic, ECF8."""
+import glob
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, restore_tree, save_tree
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (32, 16)),
+                   "norm": jnp.ones((16,))},
+        "opt": {"mu": jnp.zeros((32, 16))},
+        "step": jnp.asarray(seed, jnp.int32),
+    }
+
+
+def test_atomic_save_and_restore(tmp_path):
+    d = str(tmp_path)
+    t = _tree(3)
+    save_tree(t, d, step=3)
+    r, step = restore_tree(d, t)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  np.asarray(t["params"]["w"]))
+
+
+def test_crash_mid_write_leaves_no_visible_checkpoint(tmp_path):
+    """A .tmp dir (simulated crash) is invisible to restore and GC'd."""
+    d = str(tmp_path)
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))
+    r, step = restore_tree(d, _tree())
+    assert r is None and step == -1
+    mgr = CheckpointManager(d, keep=2)
+    mgr.save_sync(1, _tree(1))
+    assert not glob.glob(os.path.join(d, "*.tmp"))
+    mgr.close()
+
+
+def test_corruption_falls_back_to_previous(tmp_path):
+    d = str(tmp_path)
+    save_tree(_tree(1), d, step=1)
+    save_tree(_tree(2), d, step=2)
+    p = os.path.join(d, "step_00000002", "manifest.json")
+    with open(p) as f:
+        m = json.load(f)
+    next(iter(m["leaves"].values()))["crc32"] = 123
+    with open(p, "w") as f:
+        json.dump(m, f)
+    r, step = restore_tree(d, _tree())
+    assert step == 1
+    assert int(r["step"]) == 1
+
+
+def test_async_and_retention(tmp_path):
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep=2)
+    for s in range(5):
+        mgr.save_async(s, _tree(s))
+    mgr.wait()
+    steps = sorted(int(p[-8:]) for p in
+                   glob.glob(os.path.join(d, "step_*")))
+    assert steps == [3, 4]
+    mgr.close()
+
+
+def test_ecf8_compressed_checkpoint_bit_exact(tmp_path):
+    from repro.core import stats
+    d = str(tmp_path)
+    bits = stats.synthesize_fp8_weights((256, 128), alpha=1.9, seed=0)
+    t = {"w8": jnp.asarray(bits).view(jnp.float8_e4m3fn).reshape(256, 128),
+         "f32": jnp.ones((4,))}
+    save_tree(t, d, step=0, compress="ecf8")
+    # the compressed file must actually be smaller than the raw fp8 bytes
+    z = glob.glob(os.path.join(d, "step_00000000", "ecf8_*.npz"))
+    assert z, "fp8 leaf was not ECF8-compressed"
+    r, _ = restore_tree(d, t)
+    np.testing.assert_array_equal(
+        np.asarray(r["w8"]).view(np.uint8),
+        np.asarray(t["w8"]).view(np.uint8))
+
+
+def test_elastic_restore_onto_different_sharding(tmp_path):
+    """Save unsharded, restore onto a sharded layout (mesh-agnostic)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    d = str(tmp_path)
+    t = _tree(5)
+    save_tree(t, d, step=5)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {
+        "params": {"w": NamedSharding(mesh, P("data", None)),
+                   "norm": NamedSharding(mesh, P(None))},
+        "opt": {"mu": NamedSharding(mesh, P("data", None))},
+        "step": NamedSharding(mesh, P()),
+    }
+    r, step = restore_tree(d, t, shardings=sh)
+    assert step == 5
+    assert r["params"]["w"].sharding == sh["params"]["w"]
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  np.asarray(t["params"]["w"]))
+
+
+@pytest.mark.slow
+def test_train_failure_restart_continuity(tmp_path):
+    """Kill the trainer mid-run (os._exit), restart, and verify the run
+    resumes from the checkpoint and completes — the restart drill."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    args = [sys.executable, "-m", "repro.launch.train", "--arch", "qwen3-8b",
+            "--smoke", "--steps", "40", "--batch", "2", "--seq-len", "16",
+            "--save-every", "10", "--log-every", "100",
+            "--ckpt-dir", str(tmp_path)]
+    p1 = subprocess.run(args + ["--fail-at-step", "25"], env=env,
+                        capture_output=True, text=True, timeout=600)
+    assert p1.returncode == 42, p1.stderr[-2000:]
+    p2 = subprocess.run(args, env=env, capture_output=True, text=True,
+                        timeout=600)
+    assert p2.returncode == 0, p2.stderr[-2000:]
+    assert "resumed from step 20 -> starting at 21" in p2.stdout, p2.stdout
+    assert "done at step 39" in p2.stdout

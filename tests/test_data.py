@@ -1,0 +1,60 @@
+"""Synthetic data pipeline: determinism and shard-assembly invariants."""
+import numpy as np
+
+from repro.data import DataConfig, SyntheticLMData
+
+
+def _cfg(**kw):
+    d = dict(vocab_size=1000, seq_len=32, global_batch=8, seed=7)
+    d.update(kw)
+    return DataConfig(**d)
+
+
+def test_deterministic_across_instances():
+    a = SyntheticLMData(_cfg()).batch_numpy(3)
+    b = SyntheticLMData(_cfg()).batch_numpy(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_batches_differ_by_index_and_seed():
+    d = SyntheticLMData(_cfg())
+    assert not np.array_equal(d.batch_numpy(0)["tokens"],
+                              d.batch_numpy(1)["tokens"])
+    d2 = SyntheticLMData(_cfg(seed=8))
+    assert not np.array_equal(d.batch_numpy(0)["tokens"],
+                              d2.batch_numpy(0)["tokens"])
+
+
+def test_labels_are_next_tokens():
+    b = SyntheticLMData(_cfg()).batch_numpy(0)
+    # labels[t] continues tokens: generator produces T+1 and splits
+    assert b["tokens"].shape == (8, 32)
+    assert b["labels"].shape == (8, 32)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_row_sharded_generation_matches_full():
+    """Any host generating its row slice gets exactly the full batch rows —
+    the elastic-restart property (no data state to migrate)."""
+    d = SyntheticLMData(_cfg())
+    full = d.batch_numpy(5)
+    lo = d.batch_numpy(5, rows=np.arange(0, 4))
+    hi = d.batch_numpy(5, rows=np.arange(4, 8))
+    np.testing.assert_array_equal(
+        np.concatenate([lo["tokens"], hi["tokens"]]), full["tokens"])
+
+
+def test_learnable_structure():
+    """The stream is predictable: the same (state) prefix recurs, so a
+    bigram table gets far below uniform entropy — guards against the
+    pipeline silently emitting pure noise."""
+    d = SyntheticLMData(_cfg(vocab_size=97, seq_len=512, global_batch=4))
+    toks = d.batch_numpy(0)["tokens"].reshape(-1)
+    pairs = {}
+    for a, b in zip(toks[:-1], toks[1:]):
+        pairs.setdefault(int(a), []).append(int(b))
+    # for most contexts the most-common successor dominates
+    acc = np.mean([max(np.bincount(v).max() / len(v), 0)
+                   for v in pairs.values() if len(v) >= 5])
+    assert acc > 0.5, acc

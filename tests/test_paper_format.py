@@ -1,0 +1,69 @@
+"""Faithfulness checks of the paper's own container (§3.1 / Algorithm 1)."""
+import numpy as np
+import pytest
+
+from repro.core import fp8, paper_format, stats
+from repro.core.huffman import Codebook
+
+
+def test_lut_cascade_structure():
+    """Cascaded 8-bit LUTs: entries <16 decode, >=240 point to subtables."""
+    # force long codes: extremely skewed distribution over many symbols
+    freqs = np.asarray([2 ** max(0, 14 - i) for i in range(16)])
+    cb = Codebook.from_freqs(freqs, max_len=16)
+    lut = paper_format.build_cascaded_lut(cb)
+    assert lut.shape[1] == 256
+    # the length table is the last LUT
+    np.testing.assert_array_equal(lut[-1, :16], cb.lengths[:16])
+    if lut.shape[0] > 2:  # pointers exist
+        assert (lut[0] >= paper_format.LUT_POINTER_BASE).any()
+
+
+def test_lut_decode_matches_codebook():
+    freqs = np.asarray([3, 1000, 500, 7, 90, 0, 2, 44, 800, 1, 0, 0, 60, 5,
+                        10, 9])
+    cb = Codebook.from_freqs(freqs, max_len=16)
+    lut = paper_format.build_cascaded_lut(cb)
+    rng = np.random.default_rng(0)
+    syms = rng.choice(np.nonzero(freqs)[0], 500, p=freqs[freqs > 0]
+                      / freqs.sum())
+    enc, nbits = cb.encode_symbols(syms)
+    pos = 0
+    for want in syms:
+        got, l, pos = paper_format._decode_with_lut(enc, lut, pos)
+        assert got == want
+    assert pos == nbits
+
+
+def test_gaps_fit_four_bits():
+    """The paper packs gaps in 4 bits; max code length 16 and 8-byte thread
+    windows keep every gap < 16 (paper §3.1) — verify on skewed data."""
+    bits = stats.synthesize_fp8_weights((40_000,), alpha=1.2, seed=2)
+    c = paper_format.encode(bits)
+    gaps = np.asarray(fp8.unpack_nibbles(c.gaps, len(c.gaps) * 2, xp=np))
+    assert gaps.max() <= 15
+
+
+def test_outpos_monotone_and_complete():
+    bits = stats.synthesize_fp8_weights((30_000,), alpha=1.9, seed=3)
+    c = paper_format.encode(bits)
+    outpos = np.asarray(c.outpos)
+    assert (np.diff(outpos) >= 0).all()
+    assert outpos[0] == 0 and outpos[-1] == c.n_elem
+
+
+def test_compressed_footprint_accounting():
+    bits = stats.synthesize_fp8_weights((64, 1024), alpha=1.9, seed=4)
+    c = paper_format.encode(bits)
+    assert c.n_bytes_total == (c.encoded.nbytes + c.packed.nbytes
+                               + c.lut.nbytes + c.gaps.nbytes
+                               + c.outpos.nbytes)
+    assert c.ratio < 1.0  # actually compresses trained-like weights
+
+
+@pytest.mark.parametrize("n", [1, 2, 127, 128, 1025])
+def test_tiny_tensors(n):
+    rng = np.random.default_rng(n)
+    bits = rng.integers(0, 256, n).astype(np.uint8)
+    c = paper_format.encode(bits)
+    np.testing.assert_array_equal(paper_format.decode_blockparallel(c), bits)

@@ -1,0 +1,133 @@
+"""Property-based tests (hypothesis) on the system's invariants.
+
+The compression invariant is universal: *any* byte content roundtrips
+bit-exactly through every container — not just alpha-stable-shaped weights.
+Codebook invariants: prefix-freeness (Kraft), length cap, near-optimality.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fixedrate, fp8, huffman, paper_format, stats, tpu_format
+
+bytes_arrays = st.integers(1, 4096).flatmap(
+    lambda n: st.builds(
+        lambda seed, mode: _make_bytes(n, seed, mode),
+        st.integers(0, 2**31 - 1),
+        st.sampled_from(["uniform", "concentrated", "two", "constant"])))
+
+
+def _make_bytes(n, seed, mode):
+    rng = np.random.default_rng(seed)
+    if mode == "uniform":
+        return rng.integers(0, 256, n).astype(np.uint8)
+    if mode == "concentrated":
+        return np.asarray(
+            stats.synthesize_fp8_weights((n,), alpha=1.7, seed=seed))
+    if mode == "two":
+        return rng.choice(np.asarray([0x3A, 0xC5], np.uint8), n)
+    return np.full(n, rng.integers(0, 256), np.uint8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bytes_arrays)
+def test_paper_container_roundtrips_any_bytes(bits):
+    c = paper_format.encode(bits)
+    np.testing.assert_array_equal(paper_format.decode_sequential(c), bits)
+    np.testing.assert_array_equal(paper_format.decode_blockparallel(c), bits)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bytes_arrays)
+def test_tpu_container_roundtrips_any_bytes(bits):
+    c = tpu_format.encode(bits, sym_per_lane=16)
+    np.testing.assert_array_equal(
+        np.asarray(tpu_format.decode_jnp(c)), bits.reshape(-1))
+
+
+@settings(max_examples=25, deadline=None)
+@given(bytes_arrays)
+def test_fixedrate_roundtrips_any_bytes(bits):
+    c = fixedrate.encode(bits)
+    np.testing.assert_array_equal(fixedrate.decode_ref(c), bits)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 10**7), min_size=1, max_size=16),
+       st.sampled_from([4, 8, 16]))
+def test_codebook_invariants(freq_list, cap):
+    freqs = np.zeros(16, dtype=np.int64)
+    freqs[: len(freq_list)] = freq_list
+    if freqs.sum() == 0:
+        freqs[0] = 1
+    n_active = int((freqs > 0).sum())
+    if (1 << cap) < n_active:
+        return
+    cb = huffman.Codebook.from_freqs(freqs, max_len=cap)
+    lens = cb.lengths[freqs > 0]
+    assert np.all(lens >= 1) and np.all(lens <= cap)
+    # Kraft inequality (prefix-freeness feasibility)
+    assert huffman.kraft_sum(cb.lengths) <= 1.0 + 1e-12
+    # near-optimality: E[len] <= H + 1 for the unrestricted cap
+    if cap == 16:
+        H = stats.shannon_entropy(freqs)
+        assert huffman.expected_length(freqs, cb.lengths) <= H + 1 + 1e-9
+    # canonical decode tables invert the codes
+    for s in range(16):
+        if freqs[s] == 0:
+            continue
+        l = int(cb.lengths[s])
+        peek = int(cb.codes[s]) << (cb.max_len - l)
+        sym, ln = cb.decode_peek(peek)
+        assert (sym, ln) == (s, l)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 999), st.integers(0, 2**31 - 1))
+def test_nibble_pack_unpack_inverse(n, seed):
+    rng = np.random.default_rng(seed)
+    nib = rng.integers(0, 16, n).astype(np.uint8)
+    packed = fp8.pack_nibbles(nib, xp=np)
+    got = np.asarray(fp8.unpack_nibbles(packed, n, xp=np))
+    np.testing.assert_array_equal(got, nib)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 2000))
+def test_fp8_field_split_assemble_identity(seed, n):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 256, n).astype(np.uint8)
+    e = fp8.exponent_field(bits, xp=np)
+    sm = fp8.signmant_nibble(bits, xp=np)
+    np.testing.assert_array_equal(fp8.assemble(e, sm, xp=np), bits)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(64, 4096))
+def test_onDevice_fixedrate_encode_matches_host(seed, n):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 256, n).astype(np.uint8)
+    host = fixedrate.encode(bits, esc_capacity=n, margin=1.0)
+    codes, esc, sm, overflow = fixedrate.encode_jnp(
+        jnp.asarray(bits), jnp.asarray(host.table),
+        esc_capacity=host.esc_capacity)
+    assert not bool(overflow)
+    np.testing.assert_array_equal(np.asarray(codes), host.codes)
+    got_esc = np.asarray(esc)[: host.esc_count]
+    want_esc = np.asarray(
+        fp8.unpack_nibbles(host.escapes, host.esc_capacity,
+                           xp=np))[: host.esc_count]
+    np.testing.assert_array_equal(got_esc, want_esc)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.3, 2.0))
+def test_entropy_lower_bound_holds_for_all_alpha(alpha):
+    """The paper's lower bound holds everywhere; its upper bound only for
+    alpha >~ 1.476 (see test_theory.py::test_paper_upper_bound_fails...)."""
+    from repro.core import theory
+    lo, hi = theory.exponent_entropy_bounds(alpha)
+    h = theory.exponent_entropy_exact(alpha)
+    assert lo - 1e-9 <= h
+    if alpha >= 1.48:
+        assert h <= hi + 1e-9

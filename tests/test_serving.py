@@ -1,0 +1,74 @@
+"""Serving engine: continuous batching correctness and slot reuse."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get, smoke_variant
+from repro.models import model as M
+from repro.serving import GenerationEngine, Request
+from repro.serving.sampler import greedy, sample_logits
+
+
+def _ref_greedy(params, cfg, prompt, n):
+    toks = list(prompt)
+    for _ in range(n):
+        logits, _ = M.forward(params, cfg, jnp.asarray(toks, jnp.int32)[None])
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return toks[len(prompt):]
+
+
+def test_engine_matches_full_forward_greedy():
+    cfg = smoke_variant(get("qwen3-8b"))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = GenerationEngine(params, cfg, max_batch=3, max_len=48)
+    reqs = [Request(prompt=[1, 2, 3, 4], max_new_tokens=5),
+            Request(prompt=[5, 6, 7], max_new_tokens=6),
+            Request(prompt=[9, 10], max_new_tokens=4),
+            Request(prompt=[11, 12, 13], max_new_tokens=4)]  # > max_batch
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert all(r.done for r in done)
+    for r in done:
+        assert r.out_tokens == _ref_greedy(params, cfg, r.prompt,
+                                           r.max_new_tokens), r.id
+
+
+def test_engine_slot_reuse_and_occupancy():
+    cfg = smoke_variant(get("xlstm-350m"))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = GenerationEngine(params, cfg, max_batch=2, max_len=32)
+    reqs = [Request(prompt=[i + 1], max_new_tokens=3) for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert all(r.done for r in done)
+    assert all(len(r.out_tokens) == 3 for r in done)
+    # 5 requests x 3 tokens across batch-2 decode steps: slots were reused
+    assert eng.steps < 15
+
+
+def test_samplers():
+    logits = jnp.asarray([[[0.0, 5.0, 1.0, -2.0]]])
+    assert int(greedy(logits)[0, 0]) == 1
+    t = sample_logits(logits, jax.random.PRNGKey(0), temperature=1e-4)
+    assert int(t[0, 0]) == 1
+    tk = sample_logits(jnp.tile(logits, (8, 1, 1)), jax.random.PRNGKey(1),
+                       temperature=1.0, top_k=2)
+    assert set(np.asarray(tk).reshape(-1).tolist()) <= {1, 2}
+
+
+def test_per_slot_cache_decode_matches_scalar():
+    """Per-slot timelines with equal lengths must equal the shared path."""
+    cfg = smoke_variant(get("gemma2-9b"))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0,
+                              cfg.vocab_size)
+    _, cache_s = M.prefill(params, cfg, toks, max_len=16)
+    # build per-slot cache with vector cur_len
+    cache_v = dict(cache_s)
+    cache_v["cur_len"] = jnp.full((2,), 6, jnp.int32)
+    nxt = jnp.asarray([[3], [7]], jnp.int32)
+    ls, _ = M.decode_step(params, cfg, nxt, cache_s)
+    lv, _ = M.decode_step(params, cfg, nxt, cache_v)
+    np.testing.assert_allclose(np.asarray(ls), np.asarray(lv), atol=1e-5)
