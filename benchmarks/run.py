@@ -5,6 +5,8 @@
   table2_throughput  — paper Table 2 (throughput under memory budget,
                        roofline form on this CPU-only container)
   decode_microbench  — decode-path MB/s (host wall-clock)
+  kvcache_bench      — per-layer K/V exponent entropy (fig1-style) +
+                       paged-cache memory savings table
   roofline_table     — §Roofline aggregation of the dry-run artifacts
                        (skipped gracefully when artifacts are absent)
 
@@ -17,13 +19,14 @@ import traceback
 
 
 def main() -> None:
-    from . import (decode_microbench, fig1_entropy, roofline_table,
-                   table1_memory, table2_throughput)
+    from . import (decode_microbench, fig1_entropy, kvcache_bench,
+                   roofline_table, table1_memory, table2_throughput)
     suites = [
         ("fig1_entropy", fig1_entropy.run),
         ("table1_memory", table1_memory.run),
         ("table2_throughput", table2_throughput.run),
         ("decode_microbench", decode_microbench.run),
+        ("kvcache_bench", kvcache_bench.run),
         ("roofline_table", roofline_table.run),
     ]
     failures = []

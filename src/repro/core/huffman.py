@@ -103,7 +103,11 @@ def expected_length(freqs: np.ndarray, lengths: np.ndarray) -> float:
 
 @dataclass
 class Codebook:
-    """A canonical Huffman codebook over the 16 exponent symbols."""
+    """A canonical Huffman codebook over an exponent-symbol alphabet.
+
+    The alphabet size is ``len(lengths)`` — 16 for the fp8 4-bit exponent
+    field (the paper's case), 256 for the 8-bit exponent field of
+    bf16/f32 K/V-cache pages (``repro.kvcache.codec``)."""
 
     lengths: np.ndarray  # (16,) int32, 0 => unused symbol
     codes: np.ndarray  # (16,) int64 canonical code values
@@ -132,7 +136,8 @@ class Codebook:
         L = self.max_len
         order = [s for s in range(len(self.lengths)) if self.lengths[s] > 0]
         order.sort(key=lambda s: (self.lengths[s], s))
-        self.sorted_syms = np.asarray(order + [0] * (N_SYMBOLS - len(order)),
+        n_syms = len(self.lengths)
+        self.sorted_syms = np.asarray(order + [0] * (n_syms - len(order)),
                                       dtype=np.int32)
         lj_limit = np.zeros(L, dtype=np.int64)
         first_lj = np.zeros(L, dtype=np.int64)

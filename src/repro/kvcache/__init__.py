@@ -1,0 +1,10 @@
+"""Paged, ECF8-compressed KV-cache subsystem.
+
+``paged``   — fixed-size pages, per-slot page tables, free-list allocator,
+              and the in-graph page-gather/write used by decode attention.
+``codec``   — lossless exponent-plane entropy codec for cache pages
+              (fp8 / bf16 / f32), canonical Huffman per page.
+``kernels`` — Pallas TPU decode kernel for compressed pages (+ jnp oracle).
+"""
+from . import codec, kernels, paged  # noqa: F401
+from .paged import OutOfPages, PagedKVCache  # noqa: F401

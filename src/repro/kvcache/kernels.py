@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: interleaved Huffman decode of compressed KV pages.
+
+One grid cell decodes one page = 128 interleaved lane streams x
+``sym_per_lane`` symbols — the same window-refill idiom as the weight
+kernel (``kernels/ecf8_decode.py``) generalized for cache pages:
+
+  * codes may be up to 12 bits (bf16/f32 pages code the full 8-bit
+    exponent field), so the peek is ``max_len`` bits and the window
+    refills **up to two bytes** per round (vs one for 8-bit codes);
+  * decode tables are **per page** (every page carries its own canonical
+    codebook) — each grid cell reads its own (1, L) table rows;
+  * the kernel emits *canonical symbol indices*; the (up to 256-entry)
+    canonical permutation and the sign/mantissa fuse are applied by the
+    caller as plain XLA gathers (``codec.assemble_pages_jnp``) — a
+    256-way in-register select would cost more than it saves.
+
+VMEM per cell: payload (stride x 128) + output (S x 128 x 4B), both far
+inside budget for realistic page sizes (<= 64K elements).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import codec
+from .codec import LANES
+
+
+def _decode_page_kernel(limit_ref, first_ref, offset_ref, payload_ref,
+                        out_ref, *, sym_per_lane: int, stride: int,
+                        max_len: int):
+    S = sym_per_lane
+    payload = payload_ref[0].astype(jnp.uint32)        # (stride, LANES)
+
+    win = ((payload[0:1, :] << 24) | (payload[1:2, :] << 16)
+           | (payload[2:3, :] << 8) | payload[3:4, :])  # (1, LANES)
+    byteptr = jnp.full((1, LANES), 4, dtype=jnp.int32)
+    bits_valid = jnp.full((1, LANES), 32, dtype=jnp.int32)
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (stride, LANES), 0)
+
+    def round_fn(s, carry):
+        win, byteptr, bits_valid = carry
+        peek = (win >> (32 - max_len)).astype(jnp.int32)  # (1, LANES)
+
+        length = jnp.zeros((1, LANES), jnp.int32)
+        sym_idx = jnp.zeros((1, LANES), jnp.int32)
+        found = jnp.zeros((1, LANES), jnp.bool_)
+        for l in range(1, max_len + 1):                # unrolled, static
+            lim = limit_ref[0, l - 1]
+            fl = first_ref[0, l - 1]
+            off = offset_ref[0, l - 1]
+            cond = jnp.logical_and(peek < lim, jnp.logical_not(found))
+            idx_l = off + ((peek - fl) >> (max_len - l))
+            length = jnp.where(cond, l, length)
+            sym_idx = jnp.where(cond, idx_l, sym_idx)
+            found = jnp.logical_or(found, cond)
+
+        pl.store(out_ref, (pl.dslice(0, 1), pl.dslice(s, 1), slice(None)),
+                 sym_idx.reshape(1, 1, LANES))
+
+        win = win << length.astype(jnp.uint32)
+        bits_valid = bits_valid - length
+        for _ in range(2):   # <= 2 refill bytes/round for max_len <= 16
+            need = bits_valid <= 24
+            safe_ptr = jnp.minimum(byteptr, stride - 1)
+            mask = row_iota == safe_ptr                # (stride, LANES)
+            nb = jnp.sum(jnp.where(mask, payload, jnp.uint32(0)), axis=0,
+                         keepdims=True)                # (1, LANES)
+            shift = jnp.maximum(24 - bits_valid, 0).astype(jnp.uint32)
+            win = jnp.where(need, win | (nb << shift), win)
+            byteptr = byteptr + need.astype(jnp.int32)
+            bits_valid = bits_valid + 8 * need.astype(jnp.int32)
+        return win, byteptr, bits_valid
+
+    jax.lax.fori_loop(0, S, round_fn, (win, byteptr, bits_valid))
+
+
+@functools.partial(jax.jit, static_argnames=("n_elem", "interpret"))
+def decode_page_indices_pallas(payload, tables, *, n_elem: int,
+                               interpret: bool = True):
+    """Decode canonical symbol indices for N pages.
+
+    Args:
+      payload: (N, stride, LANES) uint8 zero-padded lane streams.
+      tables:  (N, 3, L) int32 — lj_limit / first_lj / offset per page.
+
+    Returns (N, S, LANES) int32 canonical indices.
+    """
+    N, stride, _ = payload.shape
+    L = tables.shape[-1]
+    S = codec.sym_per_lane(n_elem)
+    kernel = functools.partial(_decode_page_kernel, sym_per_lane=S,
+                               stride=stride, max_len=L)
+    return pl.pallas_call(
+        kernel,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, L), lambda c: (c, 0)),    # lj_limit
+            pl.BlockSpec((1, L), lambda c: (c, 0)),    # first_lj
+            pl.BlockSpec((1, L), lambda c: (c, 0)),    # offset
+            pl.BlockSpec((1, stride, LANES), lambda c: (c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, S, LANES), lambda c: (c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, S, LANES), jnp.int32),
+        interpret=interpret,
+    )(
+        tables[:, 0].astype(jnp.int32),
+        tables[:, 1].astype(jnp.int32),
+        tables[:, 2].astype(jnp.int32),
+        payload,
+    )
+
+
+def decode_pages(payload, signmant, tables, perm, *, n_elem: int,
+                 dtype_name: str, interpret: bool = True):
+    """Full page decode via the Pallas kernel -> (N, n_elem) values.
+
+    Same contract as ``codec.decode_pages_jnp`` (the pure-XLA oracle the
+    serving engine uses in-graph); this path routes the entropy decode
+    through the TPU kernel and fuses perm + sign/mantissa outside."""
+    sym_idx = decode_page_indices_pallas(payload, tables, n_elem=n_elem,
+                                         interpret=interpret)
+    return codec.finish_pages_jnp(sym_idx, signmant, perm, n_elem=n_elem,
+                                  dtype_name=dtype_name)

@@ -1,0 +1,417 @@
+"""Paged KV cache: fixed-size pages, per-slot page tables, free-list alloc.
+
+Replaces the serving engine's monolithic ``(max_batch, max_len)`` cache.
+Every batch slot owns a list of fixed-size pages (``page_size`` token
+positions x all KV heads); a shared ``(max_batch, pages_per_slot)`` page
+table maps logical page index -> physical page id, identically for every
+attention layer (one allocation decision serves the whole stack, as in
+vLLM).  Slot reuse stops over-reserving: a short request only ever holds
+the pages it wrote, and the engine reports pages-in-use, not worst case.
+
+Physical id space:
+  * id 0 is the **garbage page** — inactive slots' table rows point at it
+    so the batched decode step can scatter/gather unconditionally;
+  * ids ``1 .. n_pages-1`` are raw pool pages;
+  * ids ``>= n_pages`` address the **cold pool**: pages that filled up are
+    entropy-coded by ``kvcache.codec`` (lossless, exponent plane) and live
+    compressed; decode-on-use happens inside the same jitted step, exactly
+    like ECF8 weights.  A page whose coded stream would exceed the uniform
+    stride budget stays raw (rare: adversarial exponent content).
+
+In-graph ops (``page_write`` / ``page_gather``) are pure functions used by
+``models.model``'s decode attention; the ``PagedKVCache`` class is the
+host-side controller driven by ``serving.engine`` across the request
+lifecycle (admit -> ensure -> compress cold -> release).
+"""
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import codec
+from .codec import LANES
+
+GARBAGE_PAGE = 0
+PAGED_KINDS = ("attn", "nope")   # "local" keeps its ring, recurrents a state
+
+
+class OutOfPages(RuntimeError):
+    """Raised when the raw pool cannot cover a request's next page."""
+
+
+# --------------------------------------------------------------------------
+# in-graph ops (called from models.model inside the jitted decode step)
+# --------------------------------------------------------------------------
+
+def page_write(pool, page_table, cur_len, kv):
+    """Scatter one new token's K (or V) into each slot's tail page.
+
+    pool: (n_pool, n_kv, ps, hd); page_table: (B, P) int32;
+    cur_len: (B,) write positions; kv: (B, n_kv, 1, hd).
+
+    Tail pages are raw by construction (a page is only compressed once
+    full), so the scatter targets the raw pool; out-of-range ids (garbage
+    rows of long-idle slots) are dropped."""
+    ps = pool.shape[2]
+    P = page_table.shape[1]
+    p_idx = jnp.clip(cur_len // ps, 0, P - 1)
+    off = cur_len % ps
+    pids = jnp.take_along_axis(page_table, p_idx[:, None], axis=1)[:, 0]
+    return pool.at[pids, :, off, :].set(
+        kv[:, :, 0, :].astype(pool.dtype), mode="drop")
+
+
+def cold_leaves(cache: dict, kn: str):
+    """The compressed-pool leaves for ``kn`` in {'k','v'}, or None."""
+    if f"{kn}_cpl" not in cache:
+        return None
+    return (cache[f"{kn}_cpl"], cache[f"{kn}_csm"],
+            cache[f"{kn}_ctab"], cache[f"{kn}_cperm"])
+
+
+_COLD_SUFFIXES = ("_cpl", "_csm", "_ctab", "_cperm")
+
+
+def strip_cold(cache: dict):
+    """Drop the cold-pool leaves from a paged cache -> (stripped, stash).
+
+    While no page is cold, decoding the (empty) cold pool in-graph every
+    step is pure waste; the engine strips these leaves so the decode step
+    traces a no-cold variant, and restores them afterwards.  Costs one
+    extra jit trace the first time a page actually goes cold."""
+    stash = {}
+    new = dict(cache)
+    for section in ("units", "tail"):
+        sec = dict(cache.get(section, {}))
+        for name, leafd in sec.items():
+            if not isinstance(leafd, dict) or "k_cpl" not in leafd:
+                continue
+            stash[(section, name)] = {
+                k: v for k, v in leafd.items() if k.endswith(_COLD_SUFFIXES)}
+            sec[name] = {k: v for k, v in leafd.items()
+                         if not k.endswith(_COLD_SUFFIXES)}
+        if sec:
+            new[section] = sec
+    return new, stash
+
+
+def restore_cold(cache: dict, stash: dict):
+    """Inverse of :func:`strip_cold` (cold leaves are read-only in-graph)."""
+    new = dict(cache)
+    for (section, name), cold in stash.items():
+        sec = dict(new[section])
+        sec[name] = {**sec[name], **cold}
+        new[section] = sec
+    return new
+
+
+def page_gather(pool, page_table, cpool=None):
+    """Gather each slot's pages into a contiguous KV history.
+
+    Cold pages (ids >= n_pool) are entropy-decoded in-graph and appended
+    to the raw pool as a virtual suffix before the gather.
+    Returns (B, n_kv, P * ps, hd)."""
+    n_kv, ps, hd = pool.shape[1:]
+    virtual = pool
+    if cpool is not None:
+        payload, signmant, tables, perm = cpool
+        dec = codec.decode_pages_jnp(
+            payload, signmant, tables, perm, n_elem=n_kv * ps * hd,
+            dtype_name=str(pool.dtype))
+        virtual = jnp.concatenate(
+            [pool, dec.reshape(-1, n_kv, ps, hd)], axis=0)
+    ids = jnp.clip(page_table, 0, virtual.shape[0] - 1)
+    gath = jnp.take(virtual, ids, axis=0)          # (B, P, n_kv, ps, hd)
+    B, P = page_table.shape
+    return gath.transpose(0, 2, 1, 3, 4).reshape(B, n_kv, P * ps, hd)
+
+
+# --------------------------------------------------------------------------
+# host-side controller
+# --------------------------------------------------------------------------
+
+class PagedKVCache:
+    """Allocator + lifecycle manager for the paged, compressible cache."""
+
+    def __init__(self, cfg: ArchConfig, max_batch: int, max_len: int, *,
+                 dtype, page_size: int = 16, n_pages: int | None = None,
+                 compress_cold: bool = False, n_cold_slots: int | None = None,
+                 budget_bits: int | None = None):
+        self.cfg = cfg
+        self.max_batch, self.max_len = max_batch, max_len
+        self.dtype = jnp.dtype(dtype)
+        self.dtype_name = str(self.dtype)
+        ps = max(1, min(page_size, max_len))
+        while max_len % ps:
+            ps -= 1
+        if ps != page_size:
+            warnings.warn(
+                f"page_size={page_size} does not divide max_len={max_len}; "
+                f"using {ps} (a tiny page inflates the page table and the "
+                f"per-token scatter/gather)", stacklevel=2)
+        self.page_size = ps
+        self.pages_per_slot = max_len // ps
+        self.n_pages = n_pages or (1 + max_batch * self.pages_per_slot)
+
+        unit = cfg.unit
+        self.n_units = cfg.n_layers // unit
+        self.n_tail = cfg.n_layers - self.n_units * unit
+        self.n_attn_layers = sum(
+            1 for i in range(cfg.n_layers) if cfg.layer_kind(i) in PAGED_KINDS)
+        self.has_attn = self.n_attn_layers > 0
+
+        self.page_elems = cfg.n_kv_heads * ps * cfg.hd
+        exp_bits, self.max_code_len, _ = codec.plane_spec(self.dtype_name)
+        self.n_sym = 1 << exp_bits
+        self.S = codec.sym_per_lane(self.page_elems)
+        self.sm_nbytes = codec.sm_bytes(self.dtype_name, self.page_elems)
+        self.compress = bool(compress_cold) and self.has_attn
+        if budget_bits is None:
+            budget_bits = exp_bits  # never worse than the raw exponent plane
+        self.stride_budget = max(codec.MIN_STRIDE,
+                                 -(-self.S * budget_bits // 8))
+        default_cold = max_batch * max(self.pages_per_slot - 1, 1)
+        self.n_cold = (n_cold_slots if n_cold_slots is not None
+                       else default_cold) if self.compress else 0
+
+        self._free = list(range(self.n_pages - 1, 0, -1))
+        self._cold_free = list(range(self.n_cold - 1, -1, -1))
+        self._slot_pages: dict[int, list[int]] = {}
+        self._skip: dict[int, set[int]] = {}
+        self._cold_bytes: dict[int, int] = {}
+
+    # -- structure ---------------------------------------------------------
+
+    def _groups(self):
+        """Yield (section, name, kind, stacked) for every layer group."""
+        unit = self.cfg.unit
+        for j in range(unit):
+            yield "units", f"pos{j}", self.cfg.pattern[j], True
+        for t in range(self.n_tail):
+            kind = self.cfg.layer_kind(self.n_units * unit + t)
+            yield "tail", f"layer{t}", kind, False
+
+    def _pool_leaves(self, stacked: bool) -> dict:
+        cfg, ps = self.cfg, self.page_size
+        lead = (self.n_units,) if stacked else ()
+        pool = lead + (self.n_pages, cfg.n_kv_heads, ps, cfg.hd)
+        d = {"k_pool": jnp.zeros(pool, self.dtype),
+             "v_pool": jnp.zeros(pool, self.dtype)}
+        if self.compress:
+            for kn in ("k", "v"):
+                d[f"{kn}_cpl"] = jnp.zeros(
+                    lead + (self.n_cold, self.stride_budget, LANES),
+                    jnp.uint8)
+                d[f"{kn}_csm"] = jnp.zeros(
+                    lead + (self.n_cold, self.sm_nbytes), jnp.uint8)
+                d[f"{kn}_ctab"] = jnp.zeros(
+                    lead + (self.n_cold, 3, self.max_code_len), jnp.int32)
+                d[f"{kn}_cperm"] = jnp.zeros(
+                    lead + (self.n_cold, self.n_sym), jnp.int32)
+        return d
+
+    def init_cache(self) -> dict:
+        """The paged cache pytree: monolithic layout with attn/nope leaves
+        replaced by page pools, plus the shared page table."""
+        from repro.models import model as M
+        cache = M.init_cache(self.cfg, self.max_batch, self.max_len,
+                             dtype=self.dtype, per_slot=True)
+        for section, name, kind, stacked in self._groups():
+            if kind in PAGED_KINDS:
+                cache[section] = {**cache[section],
+                                  name: self._pool_leaves(stacked)}
+        cache["page_table"] = jnp.zeros(
+            (self.max_batch, self.pages_per_slot), jnp.int32)
+        return cache
+
+    # -- allocator ---------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def has_cold(self) -> bool:
+        return bool(self._cold_bytes)
+
+    def pages_needed(self, prompt_len: int) -> int:
+        """Pages to cover the prompt and the first decode write."""
+        return min(prompt_len // self.page_size + 1, self.pages_per_slot)
+
+    def can_admit(self, prompt_len: int) -> bool:
+        return len(self._free) >= self.pages_needed(prompt_len)
+
+    # -- request lifecycle -------------------------------------------------
+
+    def admit(self, cache: dict, slot: int, frag: dict, prompt_len: int):
+        """Allocate a fresh slot's pages and splice the prefill fragment."""
+        need = self.pages_needed(prompt_len)
+        if len(self._free) < need:
+            raise OutOfPages(f"need {need} pages, {len(self._free)} free")
+        pids = [self._free.pop() for _ in range(need)]
+        self._slot_pages[slot] = pids
+        self._skip[slot] = set()
+
+        row = np.zeros(self.pages_per_slot, np.int32)
+        row[:need] = pids
+        cache = dict(cache)
+        cache["page_table"] = cache["page_table"].at[slot].set(
+            jnp.asarray(row))
+        cache["cur_len"] = cache["cur_len"].at[slot].set(prompt_len)
+        ids = jnp.asarray(pids, jnp.int32)
+
+        for section, name, kind, stacked in self._groups():
+            dst, src = cache[section][name], frag[section][name]
+            if kind in PAGED_KINDS:
+                new = dict(dst)
+                for kn in ("k", "v"):
+                    pages = self._frag_pages(src[kn], stacked)
+                    pool = dst[f"{kn}_pool"]
+                    if stacked:
+                        new[f"{kn}_pool"] = pool.at[:, ids].set(
+                            pages[:, :need].astype(pool.dtype))
+                    else:
+                        new[f"{kn}_pool"] = pool.at[ids].set(
+                            pages[:need].astype(pool.dtype))
+            else:
+                axis = 1 if stacked else 0
+                new = jax.tree_util.tree_map(
+                    lambda full, fr: jax.lax.dynamic_update_slice_in_dim(
+                        full, fr.astype(full.dtype), slot, axis=axis),
+                    dst, src)
+            cache[section] = {**cache[section], name: new}
+        return cache
+
+    def _frag_pages(self, x, stacked: bool):
+        """Prefill fragment (.., 1, n_kv, max_len, hd) -> page-major view."""
+        cfg, ps, P = self.cfg, self.page_size, self.pages_per_slot
+        if stacked:
+            x = x.reshape(self.n_units, cfg.n_kv_heads, P, ps, cfg.hd)
+            return x.transpose(0, 2, 1, 3, 4)       # (U, P, n_kv, ps, hd)
+        x = x.reshape(cfg.n_kv_heads, P, ps, cfg.hd)
+        return x.transpose(1, 0, 2, 3)              # (P, n_kv, ps, hd)
+
+    def ensure(self, cache: dict, slot: int, pos: int):
+        """Grow the slot's page list to cover a write at ``pos``."""
+        pages = self._slot_pages.get(slot)
+        if pages is None:
+            return cache
+        p = min(pos // self.page_size, self.pages_per_slot - 1)
+        while len(pages) <= p:
+            if not self._free:
+                raise OutOfPages(f"slot {slot} needs page {len(pages)}")
+            pid = self._free.pop()
+            cache = dict(cache)
+            cache["page_table"] = cache["page_table"].at[
+                slot, len(pages)].set(pid)
+            pages.append(pid)
+        return cache
+
+    def release(self, cache: dict, slot: int):
+        """Free a finished slot's raw pages and cold-pool entries."""
+        for e in self._slot_pages.pop(slot, []):
+            if e >= self.n_pages:
+                cs = e - self.n_pages
+                self._cold_free.append(cs)
+                self._cold_bytes.pop(cs, None)
+            elif e != GARBAGE_PAGE:
+                self._free.append(e)
+        self._skip.pop(slot, None)
+        cache = dict(cache)
+        cache["page_table"] = cache["page_table"].at[slot].set(
+            jnp.zeros(self.pages_per_slot, jnp.int32))
+        return cache
+
+    # -- cold compression --------------------------------------------------
+
+    def compress_cold_pages(self, cache: dict, slot: int, pos: int):
+        """Entropy-code the slot's full (non-tail) pages into the cold pool.
+
+        ``pos`` is the next write position; pages strictly below
+        ``pos // page_size`` are complete and never written again."""
+        if not self.compress or slot not in self._slot_pages:
+            return cache
+        full = min(pos // self.page_size, len(self._slot_pages[slot]))
+        for p in range(full):
+            if (self._slot_pages[slot][p] >= self.n_pages
+                    or p in self._skip[slot]):
+                continue
+            if not self._cold_free:
+                return cache
+            cache, ok = self._compress_one(cache, slot, p)
+            if not ok:
+                self._skip[slot].add(p)
+        return cache
+
+    def _compress_one(self, cache: dict, slot: int, p: int):
+        pid = self._slot_pages[slot][p]
+        enc = []                    # (section, name, stacked, kn, u, page)
+        for section, name, kind, stacked in self._groups():
+            if kind not in PAGED_KINDS:
+                continue
+            leafd = cache[section][name]
+            for kn in ("k", "v"):
+                pool = leafd[f"{kn}_pool"]
+                units = range(self.n_units) if stacked else (None,)
+                for u in units:
+                    # slice the one page on device; only page-sized data
+                    # crosses to the host for encoding
+                    page = np.asarray(pool[u, pid] if stacked else pool[pid])
+                    cp = codec.encode_page(page)
+                    if cp.stride > self.stride_budget:
+                        return cache, False     # incompressible: stay raw
+                    enc.append((section, name, stacked, kn, u, cp))
+
+        cslot = self._cold_free.pop()
+        total = 0
+        cache = dict(cache)
+        for section, name, stacked, kn, u, cp in enc:
+            pay = np.zeros((self.stride_budget, LANES), np.uint8)
+            pay[: cp.stride] = cp.payload
+            leafd = dict(cache[section][name])
+            idx = (u, cslot) if stacked else (cslot,)
+            leafd[f"{kn}_cpl"] = leafd[f"{kn}_cpl"].at[idx].set(pay)
+            leafd[f"{kn}_csm"] = leafd[f"{kn}_csm"].at[idx].set(cp.signmant)
+            leafd[f"{kn}_ctab"] = leafd[f"{kn}_ctab"].at[idx].set(cp.tables())
+            leafd[f"{kn}_cperm"] = leafd[f"{kn}_cperm"].at[idx].set(cp.perm)
+            cache[section] = {**cache[section], name: leafd}
+            total += cp.nbytes()
+
+        entry = self.n_pages + cslot
+        self._slot_pages[slot][p] = entry
+        cache["page_table"] = cache["page_table"].at[slot, p].set(entry)
+        self._free.append(pid)
+        self._cold_bytes[cslot] = total
+        return cache, True
+
+    # -- accounting --------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Live memory accounting (bytes; 'raw_equiv' = same pages kept
+        uncompressed, 'monolithic' = the replaced (B, max_len) cache)."""
+        raw = sum(1 for pages in self._slot_pages.values()
+                  for e in pages if GARBAGE_PAGE < e < self.n_pages)
+        cold = len(self._cold_bytes)
+        page_bytes = (self.n_attn_layers * 2 * self.page_elems
+                      * self.dtype.itemsize)
+        cold_uniform = self.n_attn_layers * 2 * (
+            self.stride_budget * LANES + self.sm_nbytes
+            + 4 * (3 * self.max_code_len + self.n_sym))
+        return {
+            "page_size": self.page_size,
+            "pages_in_use": raw,
+            "cold_pages_in_use": cold,
+            "page_bytes": page_bytes,
+            "raw_bytes_in_use": raw * page_bytes,
+            "cold_bytes_ragged": sum(self._cold_bytes.values()),
+            "cold_bytes_uniform": cold * cold_uniform,
+            "cache_bytes_paged": raw * page_bytes
+            + sum(self._cold_bytes.values()),
+            "cache_bytes_raw_equiv": (raw + cold) * page_bytes,
+            "monolithic_bytes": self.max_batch * self.pages_per_slot
+            * page_bytes,
+        }

@@ -24,6 +24,7 @@ from repro.configs import get, smoke_variant
 from repro.core import fp8
 from repro.core.store import compress_tree, fp8_cast_tree
 from repro.models import model as M
+from repro.runtime.monitor import KVCacheMonitor
 from repro.serving import GenerationEngine, Request
 
 
@@ -48,6 +49,11 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--check-lossless", action="store_true",
                     help="compare logits vs the uncompressed fp8 baseline")
+    ap.add_argument("--cache", default="paged",
+                    choices=["monolithic", "paged", "paged-compressed"],
+                    help="KV-cache layout (paged-compressed entropy-codes "
+                         "cold pages in place, decode-on-use in-graph)")
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -78,8 +84,14 @@ def main(argv=None):
     prompts = [rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12))
                .tolist() for _ in range(args.requests)]
 
+    cache_kw = dict(
+        cache_mode="monolithic" if args.cache == "monolithic" else "paged",
+        page_size=args.page_size,
+        compress_cold=args.cache == "paged-compressed",
+    )
+    mon = KVCacheMonitor()
     eng = GenerationEngine(params_c, cfg, max_batch=args.max_batch,
-                           max_len=args.max_len)
+                           max_len=args.max_len, kv_monitor=mon, **cache_kw)
     reqs = [Request(prompt=p, max_new_tokens=args.max_new) for p in prompts]
     for r in reqs:
         eng.submit(r)
@@ -91,10 +103,19 @@ def main(argv=None):
           f"({n_tok / max(dt, 1e-9):.1f} tok/s host wall-clock, "
           f"{eng.steps} decode steps, batch occupancy "
           f"{n_tok / max(eng.steps, 1):.2f})")
+    if eng.cache_mode == "paged" and mon.samples:
+        s = mon.summary()
+        ratio = s["cold_compression_ratio"]
+        cold = (f"cold-page compression {ratio:.3f}x raw"
+                if ratio == ratio else "no page went cold")
+        print(f"[serve] kv-cache ({args.cache}, page={eng.paged.page_size}):"
+              f" peak {s['peak_paged_bytes'] / 1e6:.3f}MB vs monolithic "
+              f"{s['monolithic_bytes'] / 1e6:.3f}MB "
+              f"({100 * (1 - s['paged_vs_monolithic']):.1f}% saved), {cold}")
 
     if args.check_lossless and args.compress != "none":
         eng2 = GenerationEngine(params_fp8, cfg, max_batch=args.max_batch,
-                                max_len=args.max_len)
+                                max_len=args.max_len, **cache_kw)
         reqs2 = [Request(prompt=p, max_new_tokens=args.max_new)
                  for p in prompts]
         for r in reqs2:

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kvcache import paged as paged_kv
 from . import recurrent as rec
 from .layers import (F32, apply_rope, blockwise_attention, decode_attention,
                      layer_norm, local_attention, mat, mlp_apply, mlp_init,
@@ -198,14 +199,27 @@ def _self_attention_full(p, x, cfg: ArchConfig, kind: str, dtype,
 
 
 def _self_attention_decode(p, x, cfg: ArchConfig, kind: str, dtype, cache,
-                           cur_len, mesh=None):
+                           cur_len, mesh=None, page_table=None):
     """One-token decode with KV cache update.
 
     ``cur_len`` is a scalar (shared timeline) or (B,) per-slot positions
-    (continuous-batching serving engine)."""
+    (continuous-batching serving engine).  A paged cache (``k_pool``
+    leaves + shared ``page_table``) routes through the page-scatter /
+    page-gather path; cold pages are entropy-decoded in-graph."""
     per_slot = cur_len.ndim == 1
     q, k, v = _qkv(p, x, cfg, dtype, rope=(kind != "nope"),
                    positions=cur_len[:, None] if per_slot else cur_len[None])
+    if "k_pool" in cache:
+        k_pool = paged_kv.page_write(cache["k_pool"], page_table, cur_len, k)
+        v_pool = paged_kv.page_write(cache["v_pool"], page_table, cur_len, v)
+        k_hist = paged_kv.page_gather(k_pool, page_table,
+                                      cpool=paged_kv.cold_leaves(cache, "k"))
+        v_hist = paged_kv.page_gather(v_pool, page_table,
+                                      cpool=paged_kv.cold_leaves(cache, "v"))
+        o = decode_attention(q, k_hist, v_hist, kv_len=cur_len + 1,
+                             attn_softcap=cfg.attn_softcap)
+        new_cache = {**cache, "k_pool": k_pool, "v_pool": v_pool}
+        return _attn_out(p, o, dtype), new_cache
     W = cache["k"].shape[2]
     slot = cur_len % W if kind == "local" else cur_len
     if (mesh is not None and not per_slot and "model" in mesh.axis_names
@@ -294,11 +308,12 @@ def _layer_apply_full(p, x, cfg: ArchConfig, kind: str, dtype, mesh,
 
 
 def _layer_apply_decode(p, x, cfg: ArchConfig, kind: str, dtype, mesh, cache,
-                        cur_len, cross_kv=None):
+                        cur_len, cross_kv=None, page_table=None):
     h = rms_norm(x, p["norm1"])
     if kind in ATTN_KINDS:
         o, cache = _self_attention_decode(p["attn"], h, cfg, kind, dtype,
-                                          cache, cur_len, mesh=mesh)
+                                          cache, cur_len, mesh=mesh,
+                                          page_table=page_table)
     elif kind == "rglru":
         o, cache = rec.rglru_step(p["rglru"], h[:, 0], cache, dtype=dtype)
         o = o[:, None, :]
@@ -430,6 +445,8 @@ def _run_stack(params, cfg: ArchConfig, x, dtype, mesh, mode: str,
         return x, {"units": unit_caches, "tail": tail_caches}, aux_total
 
     # decode
+    page_table = cache.get("page_table")
+
     def unit_body(x, xs):
         unit_p, unit_c = xs
         new_c = {}
@@ -439,7 +456,8 @@ def _run_stack(params, cfg: ArchConfig, x, dtype, mesh, mode: str,
                                        unit_c[f"pos{j}"], cur_len,
                                        cross_kv=(unit_c.get("cross")
                                                  if cfg.encoder_decoder
-                                                 else None))
+                                                 else None),
+                                       page_table=page_table)
             new_c[f"pos{j}"] = c
         if cfg.encoder_decoder and "cross" in unit_c:
             new_c["cross"] = unit_c["cross"]
@@ -452,7 +470,8 @@ def _run_stack(params, cfg: ArchConfig, x, dtype, mesh, mode: str,
         kind = cfg.layer_kind(n_units * unit + t)
         tc = cache["tail"][name]
         x, c = _layer_apply_decode(p, x, cfg, kind, dtype, mesh, tc, cur_len,
-                                   cross_kv=tc.get("cross"))
+                                   cross_kv=tc.get("cross"),
+                                   page_table=page_table)
         if cfg.encoder_decoder and "cross" in tc:
             c["cross"] = tc["cross"]
         new_tail[name] = c
@@ -628,4 +647,6 @@ def decode_step(params, cfg: ArchConfig, token, cache, mesh=None):
                                  cache=cache, cur_len=cur_len)
     logits = _unembed(params, cfg, x, dtype)
     new_cache["cur_len"] = cur_len + 1
+    if "page_table" in cache:
+        new_cache["page_table"] = cache["page_table"]
     return logits, new_cache

@@ -71,3 +71,55 @@ class StragglerMonitor:
     @property
     def ewma_seconds(self) -> float:
         return self._ewma
+
+
+# --------------------------------------------------------------------------
+# KV-cache accounting (serving)
+# --------------------------------------------------------------------------
+
+@dataclass
+class KVCacheMonitor:
+    """Per-step KV-cache memory accounting for the paged serving engine.
+
+    The engine records ``PagedKVCache.stats()`` after every decode step;
+    ``summary()`` reduces the trace to the numbers the serving report
+    prints: peak/mean paged bytes vs the monolithic ``(B, max_len)``
+    cache it replaced, and the cold-page compression ratio."""
+
+    samples: list = field(default_factory=list)
+
+    def record(self, stats: dict) -> None:
+        self.samples.append(dict(stats))
+
+    @property
+    def peak_paged_bytes(self) -> int:
+        return max((s["cache_bytes_paged"] for s in self.samples), default=0)
+
+    @property
+    def peak_raw_equiv_bytes(self) -> int:
+        return max((s["cache_bytes_raw_equiv"] for s in self.samples),
+                   default=0)
+
+    def summary(self) -> dict:
+        if not self.samples:
+            return {}
+        mono = self.samples[-1]["monolithic_bytes"]
+        peak = self.peak_paged_bytes
+        peak_raw = self.peak_raw_equiv_bytes
+        # the observed ratio at the step holding the most cold data (a
+        # ratio of maxima taken at different steps would be fictional)
+        cold_peak = max(self.samples,
+                        key=lambda s: s["cold_pages_in_use"] * s["page_bytes"])
+        cold_raw = cold_peak["cold_pages_in_use"] * cold_peak["page_bytes"]
+        return {
+            "steps": len(self.samples),
+            "monolithic_bytes": mono,
+            "peak_paged_bytes": peak,
+            "peak_raw_equiv_bytes": peak_raw,
+            "peak_pages_in_use": max(s["pages_in_use"] + s["cold_pages_in_use"]
+                                     for s in self.samples),
+            "paged_vs_monolithic": peak / max(mono, 1),
+            "cold_compression_ratio": (cold_peak["cold_bytes_ragged"]
+                                       / cold_raw
+                                       if cold_raw else float("nan")),
+        }

@@ -17,6 +17,14 @@ with requests continuously:
 
 Weights may be an ECF8-compressed pytree (``core.store.compress_tree``) —
 decode-on-use happens inside the same jitted step.
+
+The default cache is **paged** (``repro.kvcache``): attention layers write
+through a shared page table into fixed-size pages, short requests only
+hold the pages they wrote, and full (cold) pages can be entropy-coded
+losslessly in place (``compress_cold=True``) with in-graph decode-on-use —
+the cache-side mirror of the paper's weight story.  ``cache_mode=
+"monolithic"`` keeps the original contiguous cache (meshes,
+encoder-decoders, and pure recurrent stacks fall back automatically).
 """
 from __future__ import annotations
 
@@ -29,6 +37,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kvcache import OutOfPages, PagedKVCache
+from repro.kvcache.paged import restore_cold, strip_cold
 from repro.models import model as M
 from .sampler import greedy, sample_logits
 
@@ -54,16 +64,53 @@ def _splice(full, frag, slot: int, path_names):
         full, frag.astype(full.dtype), slot, axis=axis)
 
 
+def splice_fragment(cache, frag, slot: int):
+    """Splice a single-request prefill fragment into the monolithic batched
+    cache: unit-stacked leaves carry the batch at axis 1, tail leaves at
+    axis 0, ``cur_len`` is a per-slot scalar."""
+    flat_full, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    flat_frag = jax.tree_util.tree_flatten(frag)[0]
+    new_leaves = []
+    for (path, full), fr in zip(flat_full, flat_frag):
+        names = [str(getattr(k, "key", getattr(k, "idx", k)))
+                 for k in path]
+        new_leaves.append(_splice(full, fr, slot, names))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
 class GenerationEngine:
     def __init__(self, params, cfg: ArchConfig, *, max_batch: int = 8,
-                 max_len: int = 512, mesh=None, rng_seed: int = 0):
+                 max_len: int = 512, mesh=None, rng_seed: int = 0,
+                 cache_mode: str = "paged", page_size: int = 16,
+                 n_pages: int | None = None, compress_cold: bool = False,
+                 n_cold_slots: int | None = None, kv_monitor=None):
         self.params, self.cfg = params, cfg
         self.max_batch, self.max_len = max_batch, max_len
         self.mesh = mesh
         self.queue: deque = deque()
         self.slots: list = [None] * max_batch   # Request or None
-        self.cache = M.init_cache(cfg, max_batch, max_len,
-                                  dtype=jnp.dtype(cfg.dtype), per_slot=True)
+        # the paged path assumes single-host attention layers; fall back to
+        # the monolithic cache for meshes, encoder-decoders, and pure
+        # recurrent stacks (nothing to page there).
+        if cache_mode == "paged" and (
+                mesh is not None or cfg.encoder_decoder
+                or not any(cfg.layer_kind(i) in ("attn", "nope")
+                           for i in range(cfg.n_layers))):
+            cache_mode = "monolithic"
+        self.cache_mode = cache_mode
+        self.kv_monitor = kv_monitor
+        if cache_mode == "paged":
+            self.paged = PagedKVCache(
+                cfg, max_batch, max_len, dtype=jnp.dtype(cfg.dtype),
+                page_size=page_size, n_pages=n_pages,
+                compress_cold=compress_cold, n_cold_slots=n_cold_slots)
+            self.cache = self.paged.init_cache()
+        else:
+            self.paged = None
+            self.cache = M.init_cache(cfg, max_batch, max_len,
+                                      dtype=jnp.dtype(cfg.dtype),
+                                      per_slot=True)
+        self._host_len = [0] * max_batch        # next write position per slot
         self.rng = jax.random.PRNGKey(rng_seed)
         self._decode = jax.jit(
             lambda p, t, c: M.decode_step(p, cfg, t, c, mesh=mesh))
@@ -81,18 +128,22 @@ class GenerationEngine:
         for slot in range(self.max_batch):
             if self.slots[slot] is not None or not self.queue:
                 continue
+            if (self.paged is not None
+                    and not self.paged.can_admit(len(self.queue[0].prompt))):
+                if not any(s is not None for s in self.slots):
+                    raise OutOfPages(
+                        f"prompt needs more pages than the pool holds "
+                        f"({self.paged.free_pages} free)")
+                break   # wait for a slot to release its pages
             req = self.queue.popleft()
             toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
             logits, frag = self._prefill(self.params, toks)
-            flat_full, treedef = jax.tree_util.tree_flatten_with_path(
-                self.cache)
-            flat_frag = jax.tree_util.tree_flatten(frag)[0]
-            new_leaves = []
-            for (path, full), fr in zip(flat_full, flat_frag):
-                names = [str(getattr(k, "key", getattr(k, "idx", k)))
-                         for k in path]
-                new_leaves.append(_splice(full, fr, slot, names))
-            self.cache = jax.tree_util.tree_unflatten(treedef, new_leaves)
+            if self.paged is not None:
+                self.cache = self.paged.admit(self.cache, slot, frag,
+                                              len(req.prompt))
+            else:
+                self.cache = splice_fragment(self.cache, frag, slot)
+            self._host_len[slot] = len(req.prompt)
             tok = self._sample_one(logits, req)
             req.out_tokens.append(int(tok))
             self.last_tok = self.last_tok.at[slot, 0].set(tok)
@@ -113,21 +164,52 @@ class GenerationEngine:
                   if self.slots[s] is not None]
         if not active:
             return bool(self.queue)
-        logits, self.cache = self._decode(self.params, self.last_tok,
-                                          self.cache)
+        if self.paged is not None:
+            for s in active:   # grow page lists to cover this step's write
+                self.cache = self.paged.ensure(self.cache, s,
+                                               self._host_len[s])
+        # while nothing is cold, run the decode variant without the cold
+        # pool (its in-graph entropy decode would be pure waste)
+        stash = None
+        cache_in = self.cache
+        if (self.paged is not None and self.paged.compress
+                and not self.paged.has_cold):
+            cache_in, stash = strip_cold(self.cache)
+        logits, new_cache = self._decode(self.params, self.last_tok,
+                                         cache_in)
+        self.cache = (restore_cold(new_cache, stash) if stash
+                      else new_cache)
         self.steps += 1
         toks = np.asarray(greedy(logits))  # (B, 1)
         self.rng, k = jax.random.split(self.rng)
-        sampled = np.asarray(sample_logits(logits, k, temperature=1.0))
+        # one batched sample honoring per-request temperatures: pre-scale
+        # each row's logits by its slot's temperature (1.0 for greedy rows,
+        # whose sampled value is never read)
+        temps = np.asarray([
+            self.slots[s].temperature
+            if self.slots[s] is not None and self.slots[s].temperature > 0
+            else 1.0 for s in range(self.max_batch)], np.float32)
+        sampled = np.asarray(sample_logits(
+            logits / jnp.asarray(temps)[:, None, None], k, temperature=1.0))
         for s in active:
             req = self.slots[s]
             t = int(toks[s, 0] if req.temperature <= 0 else sampled[s, 0])
             req.out_tokens.append(t)
             self.last_tok = self.last_tok.at[s, 0].set(t)
+            self._host_len[s] += 1
             if len(req.out_tokens) >= req.max_new_tokens or (
                     len(req.prompt) + len(req.out_tokens) >= self.max_len):
                 req.done = True
                 self.slots[s] = None
+                if self.paged is not None:
+                    self.cache = self.paged.release(self.cache, s)
+        if self.paged is not None and self.paged.compress:
+            for s in range(self.max_batch):
+                if self.slots[s] is not None:
+                    self.cache = self.paged.compress_cold_pages(
+                        self.cache, s, self._host_len[s])
+        if self.kv_monitor is not None and self.paged is not None:
+            self.kv_monitor.record(self.paged.stats())
         return True
 
     def run(self, max_steps: int = 10_000) -> list:

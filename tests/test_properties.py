@@ -5,9 +5,15 @@ bit-exactly through every container — not just alpha-stable-shaped weights.
 Codebook invariants: prefix-freeness (Kraft), length cap, near-optimality.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core import fixedrate, fp8, huffman, paper_format, stats, tpu_format
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (fixedrate, fp8, huffman, paper_format,  # noqa: E402
+                        stats, tpu_format)
+from repro.kvcache import codec as kv_codec  # noqa: E402
 
 bytes_arrays = st.integers(1, 4096).flatmap(
     lambda n: st.builds(
@@ -118,6 +124,55 @@ def test_onDevice_fixedrate_encode_matches_host(seed, n):
         fp8.unpack_nibbles(host.escapes, host.esc_capacity,
                            xp=np))[: host.esc_count]
     np.testing.assert_array_equal(got_esc, want_esc)
+
+
+_PAGE_VIEWS = {"float8_e4m3fn": np.uint8, "bfloat16": np.uint16,
+               "float32": np.uint32}
+
+
+def _page_bits(n, seed, mode, dtype_name):
+    """Adversarial exponent distributions as raw bit patterns."""
+    rng = np.random.default_rng(seed)
+    uint = _PAGE_VIEWS[dtype_name]
+    nbits = np.dtype(uint).itemsize * 8
+    if mode == "uniform":           # every exponent equally likely
+        return rng.integers(0, 1 << nbits, n, dtype=np.uint64).astype(uint)
+    if mode == "concentrated":      # trained-like alpha-stable values
+        from repro.core import theory
+        import jax.numpy as jnp
+        v = theory.sample_alpha_stable((n,), alpha=1.7, seed=seed) * 0.15
+        if dtype_name == "float8_e4m3fn":
+            return stats.synthesize_fp8_weights((n,), alpha=1.7, seed=seed)
+        return np.asarray(jnp.asarray(v, jnp.dtype(dtype_name))).view(uint)
+    if mode == "two":               # two extreme exponents only
+        lo = np.uint64(1)           # smallest subnormal pattern
+        hi = np.uint64((1 << nbits) - 1)   # all-ones (NaN-ish)
+        return rng.choice(np.asarray([lo, hi]), n).astype(uint)
+    return np.full(n, rng.integers(0, 1 << nbits), dtype=np.uint64) \
+        .astype(uint)               # constant
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 2048), st.integers(0, 2**31 - 1),
+       st.sampled_from(sorted(_PAGE_VIEWS)),
+       st.sampled_from(["uniform", "concentrated", "two", "constant"]))
+def test_kv_page_codec_roundtrips_any_bits(n, seed, dtype_name, mode):
+    """The page codec is lossless for *any* bit content in every cache
+    dtype — including NaN payloads and adversarial exponent histograms
+    a trained model would never produce."""
+    import jax.numpy as jnp
+    uint = _PAGE_VIEWS[dtype_name]
+    bits = _page_bits(n, seed, mode, dtype_name)
+    view = {"float8_e4m3fn": jnp.float8_e4m3fn, "bfloat16": jnp.bfloat16,
+            "float32": np.float32}[dtype_name]
+    cp = kv_codec.encode_page(bits.view(view))
+    np.testing.assert_array_equal(
+        np.asarray(kv_codec.decode_page(cp)).view(uint).reshape(-1), bits)
+    got = kv_codec.decode_pages_jnp(
+        jnp.asarray(cp.payload)[None], jnp.asarray(cp.signmant)[None],
+        jnp.asarray(cp.tables())[None], jnp.asarray(cp.perm)[None],
+        n_elem=cp.n_elem, dtype_name=dtype_name)
+    np.testing.assert_array_equal(np.asarray(got)[0].view(uint), bits)
 
 
 @settings(max_examples=20, deadline=None)
