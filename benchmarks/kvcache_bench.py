@@ -9,10 +9,22 @@ just like trained weights, so the page codec's entropy coding wins.
 Reports, per arch / layer / K-or-V:
   * Shannon entropy of the bf16 8-bit exponent field (bits/element);
   * the page codec's true compressed ratio vs raw bf16 bytes;
-and an engine-level savings table (paged pages-in-use vs the monolithic
-``(max_batch, max_len)`` cache) from a short mixed-length stream.
+an engine-level savings table (paged pages-in-use vs the monolithic
+``(max_batch, max_len)`` cache) from a short mixed-length stream; and a
+**sharded variant** (subprocess with virtual devices, like
+tests/test_sharding.py) that serves the same stream on a 2-way data mesh
+and a 2-way model mesh, recording pages-per-shard and the cross-shard
+gather cost of each layout (zero page bytes on the data mesh by
+construction; the tiny per-layer (acc, m, l) stat-merge all-gather on the
+model mesh).
 """
 from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
 
 import numpy as np
 import jax
@@ -101,13 +113,107 @@ def run(verbose: bool = True):
         print(f"  cold-page compression {s['cold_compression_ratio']:.3f}x "
               f"raw")
     assert s["peak_paged_bytes"] < s["monolithic_bytes"]
+
+    sharded = run_sharded(verbose=verbose)
     return {
         "layers": len(rows),
         "entropy_range": (min(ents), max(ents)),
         "worst_ratio": max(ratios),
         "paged_vs_monolithic": s["paged_vs_monolithic"],
         "cold_compression_ratio": s["cold_compression_ratio"],
+        "sharded": sharded,
     }
+
+
+_SHARDED_BODY = """
+    import json, time
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.configs import get, smoke_variant
+    from repro.models import model as M
+    from repro.runtime.monitor import KVCacheMonitor
+    from repro.serving import GenerationEngine, Request
+
+    cfg = smoke_variant(get('qwen3-8b'))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    def stream():
+        rng = np.random.default_rng(0)
+        return [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                            size=rng.integers(2, 24)).tolist(),
+                        max_new_tokens=int(rng.integers(4, 24)))
+                for _ in range(8)]
+
+    def serve(mesh):
+        mon = KVCacheMonitor()
+        eng = GenerationEngine(params, cfg, max_batch=4, max_len=64,
+                               page_size=16, compress_cold=True,
+                               kv_monitor=mon, mesh=mesh)
+        reqs = stream()
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in reqs)
+        n_sh = eng.paged.n_shards
+        peak = [max(s['pages_in_use_per_shard'][k] for s in mon.samples)
+                for k in range(n_sh)]
+        return eng, {'tok_per_s': toks / max(dt, 1e-9), 'steps': eng.steps,
+                     'pages_per_shard_peak': peak,
+                     'tokens': [r.out_tokens for r in reqs]}
+
+    out = {}
+    _, out['single'] = serve(None)
+    eng, out['data_mesh'] = serve(Mesh(np.array(jax.devices()), ('data',)))
+    # data mesh: every slot's pages live on its own shard -> no page bytes
+    # ever cross a device for the gather
+    out['data_mesh']['cross_shard_gather_bytes_per_step'] = 0
+    out['data_mesh']['bit_identical_to_single'] = (
+        out['data_mesh'].pop('tokens') == out['single']['tokens'])
+    out['single'].pop('tokens')
+    _, out['model_mesh'] = serve(Mesh(np.array(jax.devices()), ('model',)))
+    out['model_mesh'].pop('tokens')
+    # model mesh: pages split round-robin over model shards; each decode
+    # step all-gathers (acc, m, l) per attention layer to merge stats
+    n_model = len(jax.devices())
+    B, Hq, hd = 4, cfg.n_heads, cfg.hd
+    out['model_mesh']['cross_shard_gather_bytes_per_step'] = (
+        eng.paged.n_attn_layers * n_model * (B * Hq * hd * 4 + 2 * B * Hq * 4))
+    print('RESULT ' + json.dumps(out))
+"""
+
+
+def run_sharded(n_devices: int = 2, verbose: bool = True):
+    """Serve the mixed stream on 2-way data / model meshes (subprocess with
+    ``--xla_force_host_platform_device_count``, keeping this process at 1
+    device) and report pages-per-shard + cross-shard gather cost."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(repo, "src"),
+               XLA_FLAGS=f"--xla_force_host_platform_device_count"
+                         f"={n_devices}")
+    p = subprocess.run([sys.executable, "-c",
+                        textwrap.dedent(_SHARDED_BODY)],
+                       env=env, capture_output=True, text=True, timeout=900)
+    assert p.returncode == 0, f"sharded bench failed:\n{p.stderr[-4000:]}"
+    out = json.loads(p.stdout.strip().splitlines()[-1].removeprefix("RESULT "))
+    assert out["data_mesh"]["bit_identical_to_single"]
+    if verbose:
+        print(f"\nsharded engine (qwen3-8b smoke, batch 4, {n_devices} "
+              f"virtual devices):")
+        for name in ("single", "data_mesh", "model_mesh"):
+            r = out[name]
+            extra = ""
+            if "pages_per_shard_peak" in r:
+                extra = (f"  pages/shard peak {r['pages_per_shard_peak']}"
+                         f"  x-shard gather "
+                         f"{r.get('cross_shard_gather_bytes_per_step', 0)}"
+                         f" B/step")
+            print(f"  {name:11s} {r['tok_per_s']:8.1f} tok/s "
+                  f"({r['steps']} steps){extra}")
+        print("  data_mesh tokens bit-identical to single-device: True")
+    return out
 
 
 if __name__ == "__main__":

@@ -66,6 +66,9 @@ def sm_bytes(dtype_name: str, n_elem: int) -> int:
 
 
 def sym_per_lane(n_elem: int) -> int:
+    """Symbols each of the 128 lane streams carries for an
+    ``n_elem``-element page (``ceil(n_elem / LANES)``; short pages are
+    padded to this with the page's modal symbol)."""
     return -(-n_elem // LANES)
 
 

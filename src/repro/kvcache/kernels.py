@@ -24,6 +24,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from . import codec
 from .codec import LANES
@@ -125,3 +127,33 @@ def decode_pages(payload, signmant, tables, perm, *, n_elem: int,
                                          interpret=interpret)
     return codec.finish_pages_jnp(sym_idx, signmant, perm, n_elem=n_elem,
                                   dtype_name=dtype_name)
+
+
+def decode_pages_sharded(payload, signmant, tables, perm, mesh, *,
+                         n_elem: int, dtype_name: str,
+                         interpret: bool = True):
+    """Decode a cold pool whose page dim shards over the mesh batch axes.
+
+    The serving cache shards cold-pool leaves over the batch axes
+    (``runtime.sharding.cache_pspecs``); each shard's Pallas grid covers
+    only its local ``N / n_shards`` pages — no page crosses a device to be
+    decoded.  Same contract as :func:`decode_pages` otherwise; the page
+    dim (and so the output's) must divide by the batch-axes size.
+    """
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not ba:
+        return decode_pages(payload, signmant, tables, perm, n_elem=n_elem,
+                            dtype_name=dtype_name, interpret=interpret)
+    b_ax = ba if len(ba) != 1 else ba[0]
+
+    def body(pay, sm, tab, prm):
+        return decode_pages(pay, sm, tab, prm, n_elem=n_elem,
+                            dtype_name=dtype_name, interpret=interpret)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(b_ax, None, None), P(b_ax, None),
+                  P(b_ax, None, None), P(b_ax, None)),
+        out_specs=P(b_ax, None),
+        check_rep=False,
+    )(payload, signmant, tables, perm)

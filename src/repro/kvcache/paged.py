@@ -18,6 +18,14 @@ Physical id space:
     like ECF8 weights.  A page whose coded stream would exceed the uniform
     stride budget stays raw (rare: adversarial exponent content).
 
+Mesh sharding (``n_shards > 1``): the pool's page dim and the page table's
+batch dim shard over the mesh's batch axes (``runtime.sharding
+.batch_axes``).  Batch shard ``k`` owns slots ``[k*B/n, (k+1)*B/n)``, raw
+page ids ``[k*n_pages/n, (k+1)*n_pages/n)`` and the matching cold-slot
+range, each with its own free list — so every slot's history is entirely
+local to its shard and the sharded decode step never gathers pages across
+devices (``models.decode_sharded.paged_decode_attention_sharded``).
+
 In-graph ops (``page_write`` / ``page_gather``) are pure functions used by
 ``models.model``'s decode attention; the ``PagedKVCache`` class is the
 host-side controller driven by ``serving.engine`` across the request
@@ -50,12 +58,15 @@ class OutOfPages(RuntimeError):
 def page_write(pool, page_table, cur_len, kv):
     """Scatter one new token's K (or V) into each slot's tail page.
 
-    pool: (n_pool, n_kv, ps, hd); page_table: (B, P) int32;
+    pool: (n_pool, n_kv, ps, hd); page_table: (B, P) int32 page ids;
     cur_len: (B,) write positions; kv: (B, n_kv, 1, hd).
 
     Tail pages are raw by construction (a page is only compressed once
-    full), so the scatter targets the raw pool; out-of-range ids (garbage
-    rows of long-idle slots) are dropped."""
+    full), so the scatter targets the raw pool; out-of-range ids are
+    dropped (``mode="drop"``) — which also makes this the per-shard write
+    under a mesh: the sharded caller translates global ids to local ones
+    and parks non-local entries out of range (``decode_sharded.
+    paged_decode_attention_sharded``)."""
     ps = pool.shape[2]
     P = page_table.shape[1]
     p_idx = jnp.clip(cur_len // ps, 0, P - 1)
@@ -66,7 +77,12 @@ def page_write(pool, page_table, cur_len, kv):
 
 
 def cold_leaves(cache: dict, kn: str):
-    """The compressed-pool leaves for ``kn`` in {'k','v'}, or None."""
+    """The compressed-pool leaves for ``kn`` in {'k','v'}, or None.
+
+    Returns (payload (n_cold, stride, LANES) u8, signmant (n_cold, sm) u8,
+    tables (n_cold, 3, max_len) i32, perm (n_cold, n_sym) i32) — the
+    argument order of ``codec.decode_pages_jnp``.  See docs/FORMATS.md §3
+    for the leaf layout."""
     if f"{kn}_cpl" not in cache:
         return None
     return (cache[f"{kn}_cpl"], cache[f"{kn}_csm"],
@@ -112,9 +128,12 @@ def restore_cold(cache: dict, stash: dict):
 def page_gather(pool, page_table, cpool=None):
     """Gather each slot's pages into a contiguous KV history.
 
-    Cold pages (ids >= n_pool) are entropy-decoded in-graph and appended
-    to the raw pool as a virtual suffix before the gather.
-    Returns (B, n_kv, P * ps, hd)."""
+    pool: (n_pool, n_kv, ps, hd); page_table: (B, P) ids into the
+    *virtual* pool; cpool: optional :func:`cold_leaves` tuple.  Cold pages
+    (ids >= n_pool) are entropy-decoded in-graph and appended to the raw
+    pool as a virtual suffix before the gather; ids are clipped, so
+    garbage rows gather page 0 (their positions are masked by ``kv_len``
+    downstream).  Returns (B, n_kv, P * ps, hd)."""
     n_kv, ps, hd = pool.shape[1:]
     virtual = pool
     if cpool is not None:
@@ -140,11 +159,38 @@ class PagedKVCache:
     def __init__(self, cfg: ArchConfig, max_batch: int, max_len: int, *,
                  dtype, page_size: int = 16, n_pages: int | None = None,
                  compress_cold: bool = False, n_cold_slots: int | None = None,
-                 budget_bits: int | None = None):
+                 budget_bits: int | None = None, n_shards: int = 1):
+        """Args:
+          cfg: architecture config (layer kinds decide which groups page).
+          max_batch/max_len: static engine batch shape; every slot can hold
+            at most ``max_len`` tokens (``pages_per_slot`` pages).
+          dtype: cache storage dtype (fp8/bf16/f32 — must have a page-codec
+            plane spec when ``compress_cold``).
+          page_size: token positions per page; rounded down to a divisor of
+            ``max_len``.
+          n_pages: raw pool size (id 0 is the garbage page); defaults to
+            the worst case (every slot full) plus the garbage page, and is
+            rounded up to a multiple of ``n_shards``.
+          compress_cold: entropy-code full pages into the cold pool.
+          n_cold_slots: cold pool size (default: worst case minus one tail
+            page per slot), rounded up to a multiple of ``n_shards``.
+          budget_bits: uniform cold-payload budget in bits/symbol (default:
+            the raw exponent width — never worse than the raw plane).
+          n_shards: batch-shard count of the mesh the cache will live on
+            (``runtime.sharding.batch_axes`` sizes multiplied); slots,
+            raw pages and cold slots are partitioned contiguously into
+            ``n_shards`` ranges with one free list each.  ``max_batch``
+            must be divisible by it.
+        """
         self.cfg = cfg
         self.max_batch, self.max_len = max_batch, max_len
         self.dtype = jnp.dtype(dtype)
         self.dtype_name = str(self.dtype)
+        if n_shards < 1 or max_batch % n_shards:
+            raise ValueError(
+                f"max_batch={max_batch} not divisible by n_shards={n_shards}")
+        self.n_shards = n_shards
+        self.slots_per_shard = max_batch // n_shards
         ps = max(1, min(page_size, max_len))
         while max_len % ps:
             ps -= 1
@@ -155,7 +201,11 @@ class PagedKVCache:
                 f"per-token scatter/gather)", stacklevel=2)
         self.page_size = ps
         self.pages_per_slot = max_len // ps
-        self.n_pages = n_pages or (1 + max_batch * self.pages_per_slot)
+        n_pages = n_pages or (
+            n_shards + max_batch * self.pages_per_slot)
+        # each shard owns a contiguous, equal range of page ids
+        self.n_pages = -(-n_pages // n_shards) * n_shards
+        self.pages_per_shard = self.n_pages // n_shards
 
         unit = cfg.unit
         self.n_units = cfg.n_layers // unit
@@ -175,11 +225,19 @@ class PagedKVCache:
         self.stride_budget = max(codec.MIN_STRIDE,
                                  -(-self.S * budget_bits // 8))
         default_cold = max_batch * max(self.pages_per_slot - 1, 1)
-        self.n_cold = (n_cold_slots if n_cold_slots is not None
-                       else default_cold) if self.compress else 0
+        n_cold = (n_cold_slots if n_cold_slots is not None
+                  else default_cold) if self.compress else 0
+        self.n_cold = -(-n_cold // n_shards) * n_shards if n_cold else 0
+        self.cold_per_shard = self.n_cold // n_shards
 
-        self._free = list(range(self.n_pages - 1, 0, -1))
-        self._cold_free = list(range(self.n_cold - 1, -1, -1))
+        # per-shard free lists (descending, so pop() hands out low ids
+        # first); shard 0's range excludes the garbage page id 0
+        pps = self.pages_per_shard
+        self._free = [list(range((k + 1) * pps - 1, max(k * pps, 1) - 1, -1))
+                      for k in range(n_shards)]
+        cps = self.cold_per_shard
+        self._cold_free = [list(range((k + 1) * cps - 1, k * cps - 1, -1))
+                           for k in range(n_shards)]
         self._slot_pages: dict[int, list[int]] = {}
         self._skip: dict[int, set[int]] = {}
         self._cold_bytes: dict[int, int] = {}
@@ -230,9 +288,18 @@ class PagedKVCache:
 
     # -- allocator ---------------------------------------------------------
 
+    def shard_of_slot(self, slot: int) -> int:
+        """Batch shard owning ``slot`` (contiguous slot ranges per shard)."""
+        return slot // self.slots_per_shard
+
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        """Total free raw pages across all shards."""
+        return sum(len(f) for f in self._free)
+
+    @property
+    def free_pages_per_shard(self) -> list[int]:
+        return [len(f) for f in self._free]
 
     @property
     def has_cold(self) -> bool:
@@ -242,17 +309,26 @@ class PagedKVCache:
         """Pages to cover the prompt and the first decode write."""
         return min(prompt_len // self.page_size + 1, self.pages_per_slot)
 
-    def can_admit(self, prompt_len: int) -> bool:
-        return len(self._free) >= self.pages_needed(prompt_len)
+    def can_admit(self, prompt_len: int, slot: int | None = None) -> bool:
+        """Whether ``slot``'s shard (any shard when ``slot`` is None) has
+        enough free pages for a ``prompt_len``-token prompt."""
+        need = self.pages_needed(prompt_len)
+        if slot is None:
+            return any(len(f) >= need for f in self._free)
+        return len(self._free[self.shard_of_slot(slot)]) >= need
 
     # -- request lifecycle -------------------------------------------------
 
     def admit(self, cache: dict, slot: int, frag: dict, prompt_len: int):
-        """Allocate a fresh slot's pages and splice the prefill fragment."""
+        """Allocate a fresh slot's pages (from its shard's free list) and
+        splice the prefill fragment into the pool."""
         need = self.pages_needed(prompt_len)
-        if len(self._free) < need:
-            raise OutOfPages(f"need {need} pages, {len(self._free)} free")
-        pids = [self._free.pop() for _ in range(need)]
+        sh = self.shard_of_slot(slot)
+        free = self._free[sh]
+        if len(free) < need:
+            raise OutOfPages(f"shard {sh}: slot {slot} needs {need} pages, "
+                             f"{len(free)} free")
+        pids = [free.pop() for _ in range(need)]
         self._slot_pages[slot] = pids
         self._skip[slot] = set()
 
@@ -296,15 +372,18 @@ class PagedKVCache:
         return x.transpose(1, 0, 2, 3)              # (P, n_kv, ps, hd)
 
     def ensure(self, cache: dict, slot: int, pos: int):
-        """Grow the slot's page list to cover a write at ``pos``."""
+        """Grow the slot's page list to cover a write at ``pos`` (allocating
+        from the slot's shard)."""
         pages = self._slot_pages.get(slot)
         if pages is None:
             return cache
+        sh = self.shard_of_slot(slot)
         p = min(pos // self.page_size, self.pages_per_slot - 1)
         while len(pages) <= p:
-            if not self._free:
-                raise OutOfPages(f"slot {slot} needs page {len(pages)}")
-            pid = self._free.pop()
+            if not self._free[sh]:
+                raise OutOfPages(
+                    f"shard {sh}: slot {slot} needs page {len(pages)}")
+            pid = self._free[sh].pop()
             cache = dict(cache)
             cache["page_table"] = cache["page_table"].at[
                 slot, len(pages)].set(pid)
@@ -312,14 +391,15 @@ class PagedKVCache:
         return cache
 
     def release(self, cache: dict, slot: int):
-        """Free a finished slot's raw pages and cold-pool entries."""
+        """Free a finished slot's raw pages and cold-pool entries back to
+        the free lists of the shards that own the ids."""
         for e in self._slot_pages.pop(slot, []):
             if e >= self.n_pages:
                 cs = e - self.n_pages
-                self._cold_free.append(cs)
+                self._cold_free[cs // max(self.cold_per_shard, 1)].append(cs)
                 self._cold_bytes.pop(cs, None)
             elif e != GARBAGE_PAGE:
-                self._free.append(e)
+                self._free[e // self.pages_per_shard].append(e)
         self._skip.pop(slot, None)
         cache = dict(cache)
         cache["page_table"] = cache["page_table"].at[slot].set(
@@ -335,12 +415,13 @@ class PagedKVCache:
         ``pos // page_size`` are complete and never written again."""
         if not self.compress or slot not in self._slot_pages:
             return cache
+        sh = self.shard_of_slot(slot)
         full = min(pos // self.page_size, len(self._slot_pages[slot]))
         for p in range(full):
             if (self._slot_pages[slot][p] >= self.n_pages
                     or p in self._skip[slot]):
                 continue
-            if not self._cold_free:
+            if not self._cold_free[sh]:
                 return cache
             cache, ok = self._compress_one(cache, slot, p)
             if not ok:
@@ -366,7 +447,7 @@ class PagedKVCache:
                         return cache, False     # incompressible: stay raw
                     enc.append((section, name, stacked, kn, u, cp))
 
-        cslot = self._cold_free.pop()
+        cslot = self._cold_free[self.shard_of_slot(slot)].pop()
         total = 0
         cache = dict(cache)
         for section, name, stacked, kn, u, cp in enc:
@@ -384,7 +465,7 @@ class PagedKVCache:
         entry = self.n_pages + cslot
         self._slot_pages[slot][p] = entry
         cache["page_table"] = cache["page_table"].at[slot, p].set(entry)
-        self._free.append(pid)
+        self._free[pid // self.pages_per_shard].append(pid)
         self._cold_bytes[cslot] = total
         return cache, True
 
@@ -392,10 +473,17 @@ class PagedKVCache:
 
     def stats(self) -> dict:
         """Live memory accounting (bytes; 'raw_equiv' = same pages kept
-        uncompressed, 'monolithic' = the replaced (B, max_len) cache)."""
+        uncompressed, 'monolithic' = the replaced (B, max_len) cache).
+
+        ``pages_in_use_per_shard`` counts raw+cold pages held by each batch
+        shard's slots — the load-balance signal for sharded serving."""
         raw = sum(1 for pages in self._slot_pages.values()
                   for e in pages if GARBAGE_PAGE < e < self.n_pages)
         cold = len(self._cold_bytes)
+        per_shard = [0] * self.n_shards
+        for slot, pages in self._slot_pages.items():
+            per_shard[self.shard_of_slot(slot)] += sum(
+                1 for e in pages if e != GARBAGE_PAGE)
         page_bytes = (self.n_attn_layers * 2 * self.page_elems
                       * self.dtype.itemsize)
         cold_uniform = self.n_attn_layers * 2 * (
@@ -403,6 +491,9 @@ class PagedKVCache:
             + 4 * (3 * self.max_code_len + self.n_sym))
         return {
             "page_size": self.page_size,
+            "n_shards": self.n_shards,
+            "pages_in_use_per_shard": per_shard,
+            "free_pages_per_shard": self.free_pages_per_shard,
             "pages_in_use": raw,
             "cold_pages_in_use": cold,
             "page_bytes": page_bytes,

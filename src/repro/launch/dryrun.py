@@ -44,10 +44,8 @@ ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 
 
 def _batch_pspec(specs: dict, mesh) -> dict:
-    ba = SH.batch_axes(mesh)
-    ba_size = 1
-    for a in (ba if isinstance(ba, tuple) else (ba,)):
-        ba_size *= mesh.shape[a]
+    ba = SH.batch_axes(mesh)   # tuple, single name, or None (no batch axis)
+    ba_size = SH._axis_size(mesh, ba)
     out = {}
     for k, v in specs.items():
         b = ba if v.shape[0] % ba_size == 0 else None

@@ -10,6 +10,11 @@ while this driver proves the end-to-end serving path runs and is bit-exact.
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
       --compress tpu --requests 8
+
+  # sharded serving on a 2-way data mesh (CPU: export
+  # XLA_FLAGS=--xla_force_host_platform_device_count=2 first)
+  PYTHONPATH=src python -m repro.launch.serve --smoke --mesh 2 \
+      --cache paged-compressed --requests 8
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ import time
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 
 from repro.configs import get, smoke_variant
 from repro.core import fp8
@@ -52,14 +58,45 @@ def main(argv=None):
     ap.add_argument("--cache", default="paged",
                     choices=["monolithic", "paged", "paged-compressed"],
                     help="KV-cache layout (paged-compressed entropy-codes "
-                         "cold pages in place, decode-on-use in-graph)")
+                         "cold pages in place, decode-on-use in-graph). "
+                         "Combines with --mesh: the paged variants shard "
+                         "the page pool/table over the mesh batch axes "
+                         "(bit-identical to single-device on a pure data "
+                         "mesh); monolithic relies on GSPMD cache "
+                         "sharding instead.")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--mesh", default=None, metavar="D[xM]",
+                    help="serve on a (data=D[, model=M]) device mesh, e.g. "
+                         "'2' or '2x2'.  Needs D*M visible devices (on CPU "
+                         "set XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N).  --max-batch must be divisible by D or "
+                         "the engine falls back to the monolithic cache.")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
+
+    mesh = None
+    if args.mesh:
+        try:
+            dims = [int(x) for x in args.mesh.lower().split("x")]
+        except ValueError:
+            dims = []
+        if not 1 <= len(dims) <= 2 or any(d < 1 for d in dims):
+            raise SystemExit(
+                f"--mesh {args.mesh!r}: expected 'D' or 'DxM' with "
+                f"positive integers (e.g. '2' or '2x2')")
+        n_dev = int(np.prod(dims))
+        if n_dev > len(jax.devices()):
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {n_dev} devices, "
+                f"{len(jax.devices())} visible (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={n_dev})")
+        axes = ("data", "model")[: len(dims)]
+        mesh = Mesh(np.asarray(jax.devices()[:n_dev]).reshape(dims), axes)
+        print(f"[serve] mesh {dict(zip(axes, dims))}")
 
     params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
     # FP8 baseline: the paper compresses released FP8 checkpoints
@@ -91,7 +128,8 @@ def main(argv=None):
     )
     mon = KVCacheMonitor()
     eng = GenerationEngine(params_c, cfg, max_batch=args.max_batch,
-                           max_len=args.max_len, kv_monitor=mon, **cache_kw)
+                           max_len=args.max_len, kv_monitor=mon, mesh=mesh,
+                           **cache_kw)
     reqs = [Request(prompt=p, max_new_tokens=args.max_new) for p in prompts]
     for r in reqs:
         eng.submit(r)
@@ -112,10 +150,16 @@ def main(argv=None):
               f" peak {s['peak_paged_bytes'] / 1e6:.3f}MB vs monolithic "
               f"{s['monolithic_bytes'] / 1e6:.3f}MB "
               f"({100 * (1 - s['paged_vs_monolithic']):.1f}% saved), {cold}")
+        if eng.paged.n_shards > 1:
+            peak_shard = [max(st["pages_in_use_per_shard"][k]
+                              for st in mon.samples)
+                          for k in range(eng.paged.n_shards)]
+            print(f"[serve] pages-per-shard peak {peak_shard} "
+                  f"(free now {eng.paged.free_pages_per_shard})")
 
     if args.check_lossless and args.compress != "none":
         eng2 = GenerationEngine(params_fp8, cfg, max_batch=args.max_batch,
-                                max_len=args.max_len, **cache_kw)
+                                max_len=args.max_len, mesh=mesh, **cache_kw)
         reqs2 = [Request(prompt=p, max_new_tokens=args.max_new)
                  for p in prompts]
         for r in reqs2:

@@ -210,6 +210,17 @@ def _self_attention_decode(p, x, cfg: ArchConfig, kind: str, dtype, cache,
     q, k, v = _qkv(p, x, cfg, dtype, rope=(kind != "nope"),
                    positions=cur_len[:, None] if per_slot else cur_len[None])
     if "k_pool" in cache:
+        from .decode_sharded import (paged_decode_attention_sharded,
+                                     paged_shardable)
+        if paged_shardable(cache, page_table, cur_len, mesh):
+            # mesh-sharded paged path: pool/table shard over the batch
+            # axes (per-shard page ranges, fully local scatter/gather);
+            # a model axis splits each slot's pages and merges stats
+            o, k_pool, v_pool = paged_decode_attention_sharded(
+                q, k, v, cache, page_table, cur_len, mesh,
+                softcap=cfg.attn_softcap)
+            new_cache = {**cache, "k_pool": k_pool, "v_pool": v_pool}
+            return _attn_out(p, o, dtype), new_cache
         k_pool = paged_kv.page_write(cache["k_pool"], page_table, cur_len, k)
         v_pool = paged_kv.page_write(cache["v_pool"], page_table, cur_len, v)
         k_hist = paged_kv.page_gather(k_pool, page_table,

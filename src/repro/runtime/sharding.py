@@ -38,8 +38,14 @@ from repro.configs.base import ArchConfig
 
 
 def batch_axes(mesh: Mesh):
-    """Mesh axes the global batch shards over ('pod' folds into DP)."""
+    """Mesh axes the global batch shards over ('pod' folds into DP).
+
+    Returns a tuple of axis names, a single name, or ``None`` when the
+    mesh has no batch axis (pure tensor-parallel mesh) — all three forms
+    drop into a ``PartitionSpec`` entry unchanged."""
     ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not ax:
+        return None
     return ax if len(ax) != 1 else ax[0]
 
 
@@ -70,7 +76,14 @@ _OUT_IN = ("wo", "w_out", "w_down")
 
 @dataclass(frozen=True)
 class ShardingRules:
-    """Knobs for the hillclimb loop (see EXPERIMENTS.md §Perf)."""
+    """Knobs for the hillclimb loop (see EXPERIMENTS.md §Perf).
+
+    Precedence when rules interact: the per-parameter name/rank rule in
+    ``_param_rule`` picks a base spec first; ``serve_tp`` then *drops*
+    the data (FSDP) axis from that spec; finally ``_fit`` drops any axis
+    whose size does not divide its dim (replicating that dim).  So a knob
+    can only ever remove sharding the table proposed, never add an axis
+    the table didn't place, and divisibility always wins last."""
 
     # residual-stream constraint between scan units:
     #   "none"  -> let GSPMD propagate
@@ -151,6 +164,9 @@ def param_pspecs(cfg: ArchConfig, params, mesh: Mesh,
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
+_PAGED_COLD = ("_cpl", "_csm", "_ctab", "_cperm")
+
+
 def _cache_leaf_rule(path_keys, shape, cfg: ArchConfig, mesh: Mesh):
     names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path_keys]
     name = names[-1]
@@ -159,15 +175,30 @@ def _cache_leaf_rule(path_keys, shape, cfg: ArchConfig, mesh: Mesh):
     rank = len(shape)
     base_rank = rank - stacked
     if name == "cur_len":
-        return P()
+        # scalar (shared timeline) replicates; per-slot (B,) shards with
+        # the batch like every other cache leaf
+        return _fit(mesh, (ba,), shape) if rank == 1 else P()
+    # paged-cache leaves (repro.kvcache): the pool's *page* dim, the cold
+    # pool's *cold-slot* dim and the page table's batch dim all shard over
+    # the batch axes — PagedKVCache(n_shards=...) keeps every slot's pages
+    # inside its own shard's id range, so the layout is communication-free
+    if name == "page_table":
+        return _fit(mesh, (ba, None), shape)
+    if name.endswith("_pool") or name.endswith(_PAGED_COLD):
+        return _fit(mesh, (None,) * stacked + (ba,)
+                    + (None,) * (base_rank - 1), shape)
     if name in ("k", "v") and base_rank == 4:
         # (B, Hkv, S, hd): self-attention caches shard the *sequence* over
         # model (decode_sharded merges shard stats — §Perf cell 3); cross
-        # caches (whisper, S=1500 indivisible) fall back to heads/head_dim
+        # caches (whisper, S=1500 indivisible) fall back to heads/head_dim;
+        # meshes without a model axis (pure-DP serving) shard batch only
         S = shape[stacked + 2]
-        if "cross" not in names and S % mesh.shape["model"] == 0:
+        n_model = mesh.shape.get("model", 0)
+        if not n_model:
+            spec = (ba, None, None, None)
+        elif "cross" not in names and S % n_model == 0:
             spec = (ba, None, "model", None)
-        elif shape[stacked + 1] % mesh.shape["model"] == 0:
+        elif shape[stacked + 1] % n_model == 0:
             spec = (ba, "model", None, None)
         else:
             spec = (ba, None, None, "model")
@@ -209,11 +240,12 @@ def make_constrainer(mesh: Mesh, rules: ShardingRules):
     def constrain(x):
         if mode == "none" or mesh is None:
             return x
-        if mode == "seq" and x.ndim == 3 and x.shape[1] > 1 and (
-                x.shape[1] % mesh.shape["model"] == 0):
+        n_model = mesh.shape.get("model", 0)
+        if mode == "seq" and n_model and x.ndim == 3 and x.shape[1] > 1 \
+                and x.shape[1] % n_model == 0:
             spec = P(ba, "model", None)
-        elif mode == "dmodel" and x.ndim == 3 and (
-                x.shape[2] % mesh.shape["model"] == 0):
+        elif mode == "dmodel" and n_model and x.ndim == 3 and (
+                x.shape[2] % n_model == 0):
             spec = P(ba, None, "model")
         else:
             spec = P(ba, *(None,) * (x.ndim - 1))

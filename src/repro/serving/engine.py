@@ -22,13 +22,25 @@ The default cache is **paged** (``repro.kvcache``): attention layers write
 through a shared page table into fixed-size pages, short requests only
 hold the pages they wrote, and full (cold) pages can be entropy-coded
 losslessly in place (``compress_cold=True``) with in-graph decode-on-use —
-the cache-side mirror of the paper's weight story.  ``cache_mode=
-"monolithic"`` keeps the original contiguous cache (meshes,
-encoder-decoders, and pure recurrent stacks fall back automatically).
+the cache-side mirror of the paper's weight story.
+
+Under a JAX **mesh** the paged cache stays paged: the page pool, cold
+pool, page table and per-slot timelines shard over the mesh's batch axes
+(``runtime.sharding.batch_axes``), the allocator keeps one free list per
+batch shard so every slot's pages are local to its shard, and the decode
+step routes through ``models.decode_sharded.paged_decode_attention_
+sharded`` (fully local page scatter/gather per batch shard; an optional
+``model`` axis splits each slot's pages and merges softmax stats).  On a
+pure batch-axes mesh the sharded engine is **bit-identical** to the
+single-device run.  ``cache_mode="monolithic"`` keeps the original
+contiguous cache; encoder-decoders, pure recurrent stacks (nothing to
+page) and meshes whose batch-axes size does not divide ``max_batch``
+still fall back to it.
 """
 from __future__ import annotations
 
 import itertools
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -40,6 +52,7 @@ from repro.configs.base import ArchConfig
 from repro.kvcache import OutOfPages, PagedKVCache
 from repro.kvcache.paged import restore_cold, strip_cold
 from repro.models import model as M
+from repro.runtime import sharding as SH
 from .sampler import greedy, sample_logits
 
 _ids = itertools.count()
@@ -56,7 +69,10 @@ class Request:
 
 
 def _splice(full, frag, slot: int, path_names):
-    """Insert a single-request cache fragment at ``slot`` of the batch."""
+    """Insert a single-request cache fragment at ``slot`` of the batch.
+
+    ``path_names`` are the stringified pytree path keys of the leaf; the
+    batch axis is inferred from them (see :func:`splice_fragment`)."""
     axis = 1 if "units" in path_names else 0
     if "cur_len" in path_names:
         return full.at[slot].set(frag)
@@ -66,8 +82,14 @@ def _splice(full, frag, slot: int, path_names):
 
 def splice_fragment(cache, frag, slot: int):
     """Splice a single-request prefill fragment into the monolithic batched
-    cache: unit-stacked leaves carry the batch at axis 1, tail leaves at
-    axis 0, ``cur_len`` is a per-slot scalar."""
+    cache.
+
+    Leaf placement is dispatched on the pytree *path names* (the cache is
+    a plain dict tree, no metadata): leaves under ``"units"`` are
+    scan-stacked ``(n_units, B, ...)`` so the batch sits at axis 1; leaves
+    under ``"tail"`` (and everything else) carry the batch at axis 0; the
+    ``"cur_len"`` leaf is a per-slot ``(B,)`` vector indexed directly.
+    ``frag`` must have the same treedef with batch size 1."""
     flat_full, treedef = jax.tree_util.tree_flatten_with_path(cache)
     flat_frag = jax.tree_util.tree_flatten(frag)[0]
     new_leaves = []
@@ -84,18 +106,34 @@ class GenerationEngine:
                  cache_mode: str = "paged", page_size: int = 16,
                  n_pages: int | None = None, compress_cold: bool = False,
                  n_cold_slots: int | None = None, kv_monitor=None):
+        """``mesh``: optional ``jax.sharding.Mesh``; the paged cache shards
+        over its batch axes (see module docstring) and decode/prefill steps
+        are jitted against it.  ``cache_mode``/``page_size``/``n_pages``/
+        ``compress_cold``/``n_cold_slots`` configure the paged cache
+        (``kvcache.PagedKVCache``); ``kv_monitor`` (``runtime.monitor.
+        KVCacheMonitor``) records per-step memory stats."""
         self.params, self.cfg = params, cfg
         self.max_batch, self.max_len = max_batch, max_len
         self.mesh = mesh
         self.queue: deque = deque()
         self.slots: list = [None] * max_batch   # Request or None
-        # the paged path assumes single-host attention layers; fall back to
-        # the monolithic cache for meshes, encoder-decoders, and pure
-        # recurrent stacks (nothing to page there).
+        # fall back to the monolithic cache for encoder-decoders and pure
+        # recurrent stacks (nothing to page); meshes are served paged, with
+        # pool/table sharded over the batch axes — unless the batch-axes
+        # size does not divide max_batch (no per-shard slot ranges then).
+        n_shards = 1
+        if mesh is not None:
+            n_shards = SH._axis_size(mesh, SH.batch_axes(mesh))
         if cache_mode == "paged" and (
-                mesh is not None or cfg.encoder_decoder
+                cfg.encoder_decoder
                 or not any(cfg.layer_kind(i) in ("attn", "nope")
                            for i in range(cfg.n_layers))):
+            cache_mode = "monolithic"
+        if cache_mode == "paged" and max_batch % n_shards:
+            warnings.warn(
+                f"max_batch={max_batch} not divisible by the mesh batch-"
+                f"axes size {n_shards}; falling back to the monolithic "
+                f"cache", stacklevel=2)
             cache_mode = "monolithic"
         self.cache_mode = cache_mode
         self.kv_monitor = kv_monitor
@@ -103,8 +141,14 @@ class GenerationEngine:
             self.paged = PagedKVCache(
                 cfg, max_batch, max_len, dtype=jnp.dtype(cfg.dtype),
                 page_size=page_size, n_pages=n_pages,
-                compress_cold=compress_cold, n_cold_slots=n_cold_slots)
+                compress_cold=compress_cold, n_cold_slots=n_cold_slots,
+                n_shards=n_shards)
             self.cache = self.paged.init_cache()
+            if mesh is not None:
+                # pin the pool/table/cur_len layout so every decode step
+                # starts from the sharded placement instead of resharding
+                self.cache = jax.device_put(self.cache, SH.named(
+                    mesh, SH.cache_pspecs(cfg, self.cache, mesh)))
         else:
             self.paged = None
             self.cache = M.init_cache(cfg, max_batch, max_len,
@@ -129,12 +173,11 @@ class GenerationEngine:
             if self.slots[slot] is not None or not self.queue:
                 continue
             if (self.paged is not None
-                    and not self.paged.can_admit(len(self.queue[0].prompt))):
-                if not any(s is not None for s in self.slots):
-                    raise OutOfPages(
-                        f"prompt needs more pages than the pool holds "
-                        f"({self.paged.free_pages} free)")
-                break   # wait for a slot to release its pages
+                    and not self.paged.can_admit(len(self.queue[0].prompt),
+                                                 slot)):
+                # another free slot may live on a shard with pages; if
+                # none does, the post-loop check below decides deadlock
+                continue
             req = self.queue.popleft()
             toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
             logits, frag = self._prefill(self.params, toks)
@@ -148,6 +191,13 @@ class GenerationEngine:
             req.out_tokens.append(int(tok))
             self.last_tok = self.last_tok.at[slot, 0].set(tok)
             self.slots[slot] = req
+        if (self.queue and self.paged is not None
+                and not any(s is not None for s in self.slots)):
+            # every slot is free yet none could admit the head request:
+            # no release will ever refill the free lists
+            raise OutOfPages(
+                f"prompt needs more pages than its shard holds (free per "
+                f"shard: {self.paged.free_pages_per_shard})")
 
     def _sample_one(self, logits, req: Request):
         if req.temperature <= 0:

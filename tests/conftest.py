@@ -1,8 +1,29 @@
 """Pytest config.  NOTE: no XLA_FLAGS here — tests must see 1 device;
-multi-device tests spawn subprocesses (test_sharding.py) and only the
-dry-run sets the 512-device flag (launch/dryrun.py)."""
+multi-device tests spawn subprocesses (via :func:`run_subprocess`) and only
+the dry-run sets the 512-device flag (launch/dryrun.py)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: multi-minute tests (subprocess compiles, drills)")
+
+
+def run_subprocess(body: str, devices: int = 8) -> str:
+    """Run a multi-device test body in a fresh interpreter with
+    ``--xla_force_host_platform_device_count=devices`` (the main pytest
+    process must keep seeing exactly 1 device).  Asserts a zero exit and
+    returns stdout."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"),
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                       env=env, capture_output=True, text=True, timeout=900)
+    assert p.returncode == 0, \
+        f"stdout:\n{p.stdout}\nstderr:\n{p.stderr[-4000:]}"
+    return p.stdout

@@ -1,0 +1,36 @@
+"""The docs/ subsystem can't rot: intra-repo Markdown links must resolve
+and the FORMATS.md worked example must execute (same checks as the CI
+``docs`` job — tools/check_docs.py)."""
+import importlib.util
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", os.path.join(REPO, "tools", "check_docs.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_markdown_links_resolve():
+    errors = _load_checker().check_links()
+    assert not errors, "\n".join(errors)
+
+
+def test_formats_spec_doctests_pass():
+    errors = _load_checker().run_doctests()
+    assert not errors, "\n".join(errors)
+
+
+def test_docs_exist_and_linked_from_readme():
+    """Acceptance (ISSUE 2): ARCHITECTURE.md + FORMATS.md exist and the
+    README links them."""
+    for f in ("ARCHITECTURE.md", "FORMATS.md"):
+        assert os.path.exists(os.path.join(REPO, "docs", f)), f
+    with open(os.path.join(REPO, "README.md"), encoding="utf-8") as fh:
+        readme = fh.read()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/FORMATS.md" in readme

@@ -4,30 +4,15 @@ Multi-device tests run in a subprocess with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the main pytest
 process keeps seeing 1 device (the dry-run-only requirement).
 """
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
 import jax
 from jax.sharding import PartitionSpec as P
 
+from conftest import run_subprocess as _run_subprocess
+
 from repro.configs import get, smoke_variant
 from repro.runtime import sharding as SH
 from repro.runtime.steps import param_specs
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run_subprocess(body: str, devices: int = 8):
-    env = dict(os.environ,
-               PYTHONPATH=os.path.join(REPO, "src"),
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
-    p = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
-                       env=env, capture_output=True, text=True, timeout=900)
-    assert p.returncode == 0, f"stdout:\n{p.stdout}\nstderr:\n{p.stderr[-4000:]}"
-    return p.stdout
 
 
 def _mesh16():

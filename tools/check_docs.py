@@ -1,0 +1,88 @@
+"""Docs hygiene gate (run by the CI ``docs`` job and tests/test_docs.py).
+
+Two checks keep the docs/ subsystem from rotting:
+
+  1. **Links**: every intra-repo Markdown link (``[text](path)`` with a
+     relative target) in every tracked ``*.md`` file must resolve to an
+     existing file or directory.  External (``http(s)://``, ``mailto:``)
+     and pure-anchor (``#...``) targets are ignored; a ``#fragment``
+     suffix on a file target is stripped before the existence check.
+  2. **Doctests**: the worked byte-level example in ``docs/FORMATS.md``
+     is executed (``doctest``), so the spec's claims about the actual
+     bitstreams stay true against the code.
+
+Usage:  python tools/check_docs.py   (exit 0 = clean)
+"""
+from __future__ import annotations
+
+import doctest
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SKIP_DIRS = {".git", ".github", "__pycache__", ".pytest_cache", "node_modules"}
+# [text](target) — target captured up to the first unescaped ')'
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def md_files() -> list[str]:
+    out = []
+    for root, dirs, files in os.walk(REPO):
+        dirs[:] = [d for d in dirs if d not in SKIP_DIRS]
+        out.extend(os.path.join(root, f) for f in files if f.endswith(".md"))
+    return sorted(out)
+
+
+def check_links() -> list[str]:
+    """Return human-readable error strings for dangling intra-repo links."""
+    errors = []
+    for path in md_files():
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        # fenced code blocks may contain ``[x](y)``-looking noise
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), target))
+            if not os.path.exists(resolved):
+                rel = os.path.relpath(path, REPO)
+                errors.append(f"{rel}: dangling link -> {m.group(1)}")
+    return errors
+
+
+def run_doctests() -> list[str]:
+    """Doctest docs/FORMATS.md; returns error strings (empty = pass)."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    spec = os.path.join(REPO, "docs", "FORMATS.md")
+    if not os.path.exists(spec):
+        return ["docs/FORMATS.md is missing"]
+    res = doctest.testfile(spec, module_relative=False, verbose=False)
+    if res.failed:
+        return [f"docs/FORMATS.md: {res.failed}/{res.attempted} "
+                f"doctests failed"]
+    if not res.attempted:
+        return ["docs/FORMATS.md: no doctests found (worked example gone?)"]
+    return []
+
+
+def main() -> int:
+    errors = check_links() + run_doctests()
+    for e in errors:
+        print(f"[check_docs] {e}", file=sys.stderr)
+    if not errors:
+        n = len(md_files())
+        print(f"[check_docs] OK: links in {n} markdown files resolve, "
+              f"FORMATS.md doctests pass")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
