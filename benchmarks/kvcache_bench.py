@@ -10,13 +10,19 @@ Reports, per arch / layer / K-or-V:
   * Shannon entropy of the bf16 8-bit exponent field (bits/element);
   * the page codec's true compressed ratio vs raw bf16 bytes;
 an engine-level savings table (paged pages-in-use vs the monolithic
-``(max_batch, max_len)`` cache) from a short mixed-length stream; and a
-**sharded variant** (subprocess with virtual devices, like
-tests/test_sharding.py) that serves the same stream on a 2-way data mesh
-and a 2-way model mesh, recording pages-per-shard and the cross-shard
-gather cost of each layout (zero page bytes on the data mesh by
-construction; the tiny per-layer (acc, m, l) stat-merge all-gather on the
-model mesh).
+``(max_batch, max_len)`` cache) from a short mixed-length stream; an
+**oversubscription variant**: a workload whose aggregate page demand is
+>= 2x the raw pool, served through the host swap tier + preemptive
+scheduler (``--swap-bytes``), reporting swap-in/out bytes and preemption
+counts and asserting the tokens stay bit-identical to the monolithic
+reference; and a **sharded variant** (subprocess with virtual devices,
+like tests/test_sharding.py) that serves the same stream on a 2-way data
+mesh and a 2-way model mesh, recording pages-per-shard and the
+cross-shard gather cost of each layout (zero page bytes on the data mesh
+by construction; the tiny per-layer (acc, m, l) stat-merge all-gather on
+the model mesh), plus the oversubscribed workload on the 2-way data
+mesh (per-shard free lists + per-shard swap ledgers, still
+bit-identical).
 """
 from __future__ import annotations
 
@@ -114,6 +120,7 @@ def run(verbose: bool = True):
               f"raw")
     assert s["peak_paged_bytes"] < s["monolithic_bytes"]
 
+    over = run_oversubscribed(verbose=verbose)
     sharded = run_sharded(verbose=verbose)
     return {
         "layers": len(rows),
@@ -121,8 +128,80 @@ def run(verbose: bool = True):
         "worst_ratio": max(ratios),
         "paged_vs_monolithic": s["paged_vs_monolithic"],
         "cold_compression_ratio": s["cold_compression_ratio"],
+        "oversubscribed": over,
         "sharded": sharded,
     }
+
+
+# mixed-length, mixed-priority stream sized so its aggregate page demand
+# is >= 2x the raw pools used below; injected into _SHARDED_BODY too, and
+# mirrored by tests/test_serving.py's oversubscription tests
+OVERSUB_WORKLOAD = (
+    [[i + 1] * (7 + 3 * (i % 3)) for i in range(6)],    # prompts
+    [14, 10, 16, 9, 12, 11],                            # max_new_tokens
+    [0, 1, 0, 2, 1, 0],                                 # priorities
+)
+
+
+def _oversub_stream():
+    prompts, news, prios = OVERSUB_WORKLOAD
+    return [Request(prompt=p, max_new_tokens=n, priority=pr, id=10_000 + i)
+            for i, (p, n, pr) in enumerate(zip(prompts, news, prios))]
+
+
+def run_oversubscribed(verbose: bool = True):
+    """Serve a >= 2x-oversubscribed workload through swap + preemption.
+
+    The seed engine raises ``OutOfPages`` on this stream; with the swap
+    tier the whole workload completes, bit-identical to the monolithic
+    reference, and the report shows what that cost in swap traffic."""
+    cfg = smoke_variant(get(ARCHS[0]))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    def serve(**kw):
+        eng = GenerationEngine(params, cfg, max_batch=2, max_len=48, **kw)
+        reqs = _oversub_stream()
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        assert all(r.done for r in reqs)
+        return [r.out_tokens for r in reqs], eng
+
+    mono, _ = serve(cache_mode="monolithic")
+    mon = KVCacheMonitor()
+    over, eng = serve(cache_mode="paged", page_size=8, n_pages=5,
+                      compress_cold=True, n_cold_slots=1,
+                      swap_bytes=1 << 28, kv_monitor=mon)
+    demand = sum(eng.paged.pages_worst_case(len(r.prompt), r.max_new_tokens)
+                 for r in _oversub_stream())
+    assert demand >= 2 * eng.paged.n_pages, (demand, eng.paged.n_pages)
+    assert over == mono, "oversubscribed serve deviated from monolithic"
+    s = mon.summary()
+    assert s["n_preempted"] > 0 and s["swap_in_bytes_total"] > 0
+    out = {
+        "aggregate_demand_pages": demand,
+        "n_pages": eng.paged.n_pages,
+        "oversubscription": demand / eng.paged.n_pages,
+        "steps": eng.steps,
+        "n_preempted": s["n_preempted"],
+        "n_resumed": s["n_resumed"],
+        "swap_out_bytes": s["swap_out_bytes_total"],
+        "swap_in_bytes": s["swap_in_bytes_total"],
+        "peak_swap_bytes": s["peak_swap_bytes"],
+        "bit_identical_to_monolithic": True,
+    }
+    if verbose:
+        print(f"\noversubscribed engine ({ARCHS[0]}, batch 2, pool "
+              f"{out['n_pages']} pages, demand {demand} pages = "
+              f"{out['oversubscription']:.1f}x):")
+        print(f"  completed in {out['steps']} steps, "
+              f"{out['n_preempted']} preemptions "
+              f"({out['n_resumed']} resumed)")
+        print(f"  swap traffic out/in {out['swap_out_bytes']}/"
+              f"{out['swap_in_bytes']} B, peak host-resident "
+              f"{out['peak_swap_bytes']} B")
+        print("  tokens bit-identical to monolithic: True")
+    return out
 
 
 _SHARDED_BODY = """
@@ -180,6 +259,47 @@ _SHARDED_BODY = """
     B, Hq, hd = 4, cfg.n_heads, cfg.hd
     out['model_mesh']['cross_shard_gather_bytes_per_step'] = (
         eng.paged.n_attn_layers * n_model * (B * Hq * hd * 4 + 2 * B * Hq * 4))
+
+    # oversubscribed + swap on the data mesh: aggregate page demand >= 2x
+    # the raw pool, per-shard free lists + per-shard swap ledgers, tokens
+    # still bit-identical to the single-device monolithic reference
+    def oversub_reqs():
+        prompts, news, prios = __OVERSUB_WORKLOAD__
+        return [Request(prompt=p, max_new_tokens=n, priority=pr,
+                        id=10_000 + i)
+                for i, (p, n, pr) in enumerate(zip(prompts, news, prios))]
+
+    def serve_over(mesh, **kw):
+        mon = KVCacheMonitor()
+        eng = GenerationEngine(params, cfg, max_batch=4, max_len=48,
+                               kv_monitor=mon, mesh=mesh, **kw)
+        reqs = oversub_reqs()
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        assert all(r.done for r in reqs)
+        return [r.out_tokens for r in reqs], eng, mon
+
+    mono_o, _, _ = serve_over(None, cache_mode='monolithic')
+    toks_o, eng_o, mon_o = serve_over(
+        Mesh(np.array(jax.devices()), ('data',)), cache_mode='paged',
+        page_size=8, n_pages=8, compress_cold=True, n_cold_slots=2,
+        swap_bytes=1 << 28)
+    demand = sum(eng_o.paged.pages_worst_case(len(r.prompt),
+                                              r.max_new_tokens)
+                 for r in oversub_reqs())
+    assert demand >= 2 * eng_o.paged.n_pages, (demand, eng_o.paged.n_pages)
+    s_o = mon_o.summary()
+    assert toks_o == mono_o
+    assert s_o['n_preempted'] > 0 and s_o['swap_in_bytes_total'] > 0
+    out['oversubscribed_data_mesh'] = {
+        'aggregate_demand_pages': demand, 'n_pages': eng_o.paged.n_pages,
+        'steps': eng_o.steps, 'n_preempted': s_o['n_preempted'],
+        'n_resumed': s_o['n_resumed'],
+        'swap_out_bytes': s_o['swap_out_bytes_total'],
+        'swap_in_bytes': s_o['swap_in_bytes_total'],
+        'bit_identical_to_single': True,
+    }
     print('RESULT ' + json.dumps(out))
 """
 
@@ -193,8 +313,9 @@ def run_sharded(n_devices: int = 2, verbose: bool = True):
                PYTHONPATH=os.path.join(repo, "src"),
                XLA_FLAGS=f"--xla_force_host_platform_device_count"
                          f"={n_devices}")
-    p = subprocess.run([sys.executable, "-c",
-                        textwrap.dedent(_SHARDED_BODY)],
+    body = textwrap.dedent(_SHARDED_BODY).replace(
+        "__OVERSUB_WORKLOAD__", repr(OVERSUB_WORKLOAD))
+    p = subprocess.run([sys.executable, "-c", body],
                        env=env, capture_output=True, text=True, timeout=900)
     assert p.returncode == 0, f"sharded bench failed:\n{p.stderr[-4000:]}"
     out = json.loads(p.stdout.strip().splitlines()[-1].removeprefix("RESULT "))
@@ -213,6 +334,12 @@ def run_sharded(n_devices: int = 2, verbose: bool = True):
             print(f"  {name:11s} {r['tok_per_s']:8.1f} tok/s "
                   f"({r['steps']} steps){extra}")
         print("  data_mesh tokens bit-identical to single-device: True")
+        o = out["oversubscribed_data_mesh"]
+        print(f"  oversubscribed on the data mesh: demand "
+              f"{o['aggregate_demand_pages']} pages vs pool {o['n_pages']}, "
+              f"{o['n_preempted']} preemptions, swap out/in "
+              f"{o['swap_out_bytes']}/{o['swap_in_bytes']} B, "
+              f"bit-identical: True")
     return out
 
 

@@ -5,6 +5,10 @@
 ``codec``   — lossless exponent-plane entropy codec for cache pages
               (fp8 / bf16 / f32), canonical Huffman per page.
 ``kernels`` — Pallas TPU decode kernel for compressed pages (+ jnp oracle).
+``swap``    — host-side swap tier: entropy-coded pages leave the device
+              entirely (hot -> cold -> swapped) and restore bit-exactly
+              through the Pallas decode path.
 """
-from . import codec, kernels, paged  # noqa: F401
+from . import codec, kernels, paged, swap  # noqa: F401
 from .paged import OutOfPages, PagedKVCache  # noqa: F401
+from .swap import SwapExhausted, SwapStore  # noqa: F401

@@ -16,7 +16,25 @@ Physical id space:
     entropy-coded by ``kvcache.codec`` (lossless, exponent plane) and live
     compressed; decode-on-use happens inside the same jitted step, exactly
     like ECF8 weights.  A page whose coded stream would exceed the uniform
-    stride budget stays raw (rare: adversarial exponent content).
+    stride budget stays raw (rare: adversarial exponent content);
+  * **negative** ids are **swapped** pages: ``-(key + 1)`` indexes the
+    host-side :class:`repro.kvcache.swap.SwapStore` (``attach_swap``).  A
+    swapped page holds no device memory at all; its page-table entry is
+    the same negative sentinel, which the decode path clamps to the
+    garbage page — the serving engine faults every active slot resident
+    (``fault``) before any decode step gathers it.
+
+Page lifecycle (with a swap store attached)::
+
+    hot (raw pool) --page full--> cold (compressed pool)
+        \\                           |
+         \\--evict (encode)--\\      evict (device->host copy)
+                              v      v
+                            swapped (host SwapStore)
+                              |         |
+               fault (Pallas decode)  fault (reinstall container)
+                              v         v
+                             hot       cold
 
 Mesh sharding (``n_shards > 1``): the pool's page dim and the page table's
 batch dim shard over the mesh's batch axes (``runtime.sharding
@@ -241,6 +259,7 @@ class PagedKVCache:
         self._slot_pages: dict[int, list[int]] = {}
         self._skip: dict[int, set[int]] = {}
         self._cold_bytes: dict[int, int] = {}
+        self.swap = None                # SwapStore (attach_swap)
 
     # -- structure ---------------------------------------------------------
 
@@ -391,10 +410,13 @@ class PagedKVCache:
         return cache
 
     def release(self, cache: dict, slot: int):
-        """Free a finished slot's raw pages and cold-pool entries back to
-        the free lists of the shards that own the ids."""
+        """Free a finished slot's raw pages, cold-pool entries and swapped
+        pages back to the free lists / swap store that own the ids."""
         for e in self._slot_pages.pop(slot, []):
-            if e >= self.n_pages:
+            if e < 0:
+                if self.swap is not None:
+                    self.swap.discard(-e - 1)
+            elif e >= self.n_pages:
                 cs = e - self.n_pages
                 self._cold_free[cs // max(self.cold_per_shard, 1)].append(cs)
                 self._cold_bytes.pop(cs, None)
@@ -404,6 +426,270 @@ class PagedKVCache:
         cache = dict(cache)
         cache["page_table"] = cache["page_table"].at[slot].set(
             jnp.zeros(self.pages_per_slot, jnp.int32))
+        return cache
+
+    # -- swap tier (hot/cold -> host, see kvcache/swap.py) -----------------
+
+    def attach_swap(self, store) -> None:
+        """Wire a :class:`repro.kvcache.swap.SwapStore` as the host tier;
+        ``evict``/``fault`` require one."""
+        self.swap = store
+
+    def has_swapped(self, slot: int) -> bool:
+        return any(e < 0 for e in self._slot_pages.get(slot, ()))
+
+    def resident_raw_pages(self, slot: int) -> int:
+        """Raw pool pages the slot currently holds (what preempting it
+        would hand back to its shard's free list; cold and swapped
+        entries free cold slots / swap bytes instead)."""
+        return sum(1 for e in self._slot_pages.get(slot, ())
+                   if GARBAGE_PAGE < e < self.n_pages)
+
+    def n_swapped(self, slot: int) -> int:
+        return sum(1 for e in self._slot_pages.get(slot, ()) if e < 0)
+
+    def pages_worst_case(self, prompt_len: int, max_new: int) -> int:
+        """Pages the request can ever hold at once: its last cache write
+        lands at position ``min(prompt+max_new, max_len) - 2`` (the final
+        sampled token is never written), floored at ``prompt_len`` (the
+        admission grant covers the first decode write)."""
+        last = max(min(prompt_len + max_new, self.max_len) - 2, prompt_len)
+        return min(last // self.page_size + 1, self.pages_per_slot)
+
+    def shard_capacity(self, shard: int) -> int:
+        """Allocatable raw pages in ``shard``'s id range (shard 0 loses
+        the garbage page)."""
+        return self.pages_per_shard - (1 if shard == 0 else 0)
+
+    def _iter_subpages(self):
+        """Yield (section, name, stacked, kn, u) in the canonical sub-page
+        order shared by evict and fault."""
+        for section, name, kind, stacked in self._groups():
+            if kind not in PAGED_KINDS:
+                continue
+            for kn in ("k", "v"):
+                for u in (range(self.n_units) if stacked else (None,)):
+                    yield section, name, stacked, kn, u
+
+    def _encode_raw_page(self, cache: dict, pid: int):
+        """Entropy-code one raw pool page into a host SwappedPage."""
+        from . import swap as SW
+        page = SW.SwappedPage(was_cold=False)
+        for section, name, stacked, kn, u in self._iter_subpages():
+            pool = cache[section][name][f"{kn}_pool"]
+            sub = np.asarray(pool[u, pid] if stacked else pool[pid])
+            cp = codec.encode_page(sub)
+            page.entries.append(SW.SwapEntry(
+                section, name, stacked, kn, u, cp.payload, cp.signmant,
+                cp.tables(), cp.perm))
+            page.nbytes += cp.nbytes()
+        return page
+
+    def _copy_cold_page(self, cache: dict, cslot: int):
+        """Copy an already-coded cold page's container to the host (the
+        cheap, cold-first eviction path: no re-encode)."""
+        from . import swap as SW
+        page = SW.SwappedPage(was_cold=True,
+                              nbytes=self._cold_bytes.get(cslot, 0))
+        for section, name, stacked, kn, u in self._iter_subpages():
+            leafd = cache[section][name]
+            idx = (u, cslot) if stacked else (cslot,)
+            page.entries.append(SW.SwapEntry(
+                section, name, stacked, kn, u,
+                np.asarray(leafd[f"{kn}_cpl"][idx]),
+                np.asarray(leafd[f"{kn}_csm"][idx]),
+                np.asarray(leafd[f"{kn}_ctab"][idx]),
+                np.asarray(leafd[f"{kn}_cperm"][idx])))
+        return page
+
+    def evict(self, cache: dict, slot: int, page_idxs=None):
+        """Swap the slot's device-resident pages out to the host store.
+
+        Cold pages go first (their container copies without re-encoding);
+        raw pages are entropy-coded on the host — losslessly for *any*
+        bit content, so even a half-written tail page round-trips
+        bit-exactly.  Freed raw pages / cold slots return to their
+        shard's free lists; the page list and page-table entries become
+        negative swap sentinels (``-(key + 1)``)."""
+        if self.swap is None:
+            raise RuntimeError("evict() needs attach_swap(SwapStore)")
+        pages = self._slot_pages.get(slot)
+        if pages is None:
+            return cache
+        sh = self.shard_of_slot(slot)
+        idxs = list(range(len(pages))) if page_idxs is None else list(page_idxs)
+        # cold-first: already-compressed pages are the cheapest victims
+        idxs.sort(key=lambda p: (pages[p] < self.n_pages, p))
+        cache = dict(cache)
+        for p in idxs:
+            e = pages[p]
+            if e < 0 or e == GARBAGE_PAGE:
+                continue
+            if e >= self.n_pages:
+                cs = e - self.n_pages
+                sp = self._copy_cold_page(cache, cs)
+                key = self.swap.put(sp, sh)
+                self._cold_free[cs // max(self.cold_per_shard, 1)].append(cs)
+                self._cold_bytes.pop(cs, None)
+            else:
+                sp = self._encode_raw_page(cache, e)
+                key = self.swap.put(sp, sh)
+                self._free[e // self.pages_per_shard].append(e)
+            pages[p] = -(key + 1)
+            cache["page_table"] = cache["page_table"].at[slot, p].set(
+                -(key + 1))
+        return cache
+
+    def fault(self, cache: dict, slot: int, page_idxs=None):
+        """Restore the slot's swapped pages to the device (the inverse of
+        :func:`evict`; a no-op when nothing is swapped).
+
+        Cold-swapped pages reinstall their coded container into a fresh
+        cold slot (never decoded); raw-swapped pages are **batch-decoded
+        through the Pallas page-decode path** (``kernels.decode_pages``)
+        into fresh raw pages.  Raises :class:`OutOfPages` — before any
+        state is mutated — if the slot's shard cannot cover the restore.
+        """
+        pages = self._slot_pages.get(slot)
+        if pages is None:
+            return cache
+        idxs = [p for p in (range(len(pages)) if page_idxs is None
+                            else page_idxs) if pages[p] < 0]
+        if not idxs:
+            return cache
+        sh = self.shard_of_slot(slot)
+        # placement plan (peek only): cold-swapped pages take cold slots
+        # while they last, everything else needs a raw page
+        plan = []                       # (p, SwappedPage, to_cold)
+        cold_budget = len(self._cold_free[sh]) if self.compress else 0
+        raw_need = 0
+        for p in idxs:
+            sp = self.swap.peek(-pages[p] - 1)
+            to_cold = sp.was_cold and cold_budget > 0
+            cold_budget -= int(to_cold)
+            raw_need += int(not to_cold)
+            plan.append((p, sp, to_cold))
+        if raw_need > len(self._free[sh]):
+            raise OutOfPages(
+                f"shard {sh}: faulting {len(idxs)} swapped pages of slot "
+                f"{slot} needs {raw_need} raw pages, "
+                f"{len(self._free[sh])} free")
+
+        cache = dict(cache)
+        raw_jobs = []                   # (entry, pid) scattered after decode
+        for p, sp, to_cold in plan:
+            self.swap.pop(-pages[p] - 1)
+            if to_cold:
+                cs = self._cold_free[sh].pop()
+                for ent in sp.entries:
+                    leafd = dict(cache[ent.section][ent.name])
+                    idx = (ent.u, cs) if ent.stacked else (cs,)
+                    pay = np.zeros((self.stride_budget, LANES), np.uint8)
+                    pay[: ent.payload.shape[0]] = ent.payload
+                    leafd[f"{ent.kn}_cpl"] = \
+                        leafd[f"{ent.kn}_cpl"].at[idx].set(pay)
+                    leafd[f"{ent.kn}_csm"] = \
+                        leafd[f"{ent.kn}_csm"].at[idx].set(ent.signmant)
+                    leafd[f"{ent.kn}_ctab"] = \
+                        leafd[f"{ent.kn}_ctab"].at[idx].set(ent.tables)
+                    leafd[f"{ent.kn}_cperm"] = \
+                        leafd[f"{ent.kn}_cperm"].at[idx].set(ent.perm)
+                    cache[ent.section] = {**cache[ent.section],
+                                          ent.name: leafd}
+                self._cold_bytes[cs] = sp.nbytes
+                entry = self.n_pages + cs
+            else:
+                pid = self._free[sh].pop()
+                raw_jobs.extend((ent, pid) for ent in sp.entries)
+                entry = pid
+            pages[p] = entry
+            cache["page_table"] = cache["page_table"].at[slot, p].set(entry)
+
+        if raw_jobs:
+            cache = self._restore_raw(cache, raw_jobs)
+        return cache
+
+    def _restore_raw(self, cache: dict, jobs):
+        """Batch-decode swapped sub-pages and scatter them into the raw
+        pool: one Pallas ``decode_pages`` call covers every sub-page of
+        every page being faulted (stride padded to the batch max)."""
+        from . import kernels
+        stride = max(e.payload.shape[0] for e, _ in jobs)
+        stride = -(-stride // 4) * 4        # bucket shapes for the jit cache
+        pay = np.zeros((len(jobs), stride, LANES), np.uint8)
+        for i, (e, _) in enumerate(jobs):
+            pay[i, : e.payload.shape[0]] = e.payload
+        dec = kernels.decode_pages(
+            jnp.asarray(pay),
+            jnp.asarray(np.stack([e.signmant for e, _ in jobs])),
+            jnp.asarray(np.stack([e.tables for e, _ in jobs])),
+            jnp.asarray(np.stack([e.perm for e, _ in jobs])),
+            n_elem=self.page_elems, dtype_name=self.dtype_name)
+        shape = (self.cfg.n_kv_heads, self.page_size, self.cfg.hd)
+        for i, (e, pid) in enumerate(jobs):
+            pool = cache[e.section][e.name][f"{e.kn}_pool"]
+            sub = dec[i].reshape(shape).astype(pool.dtype)
+            idx = (e.u, pid) if e.stacked else (pid,)
+            cache[e.section] = {
+                **cache[e.section],
+                e.name: {**cache[e.section][e.name],
+                         f"{e.kn}_pool": pool.at[idx].set(sub)}}
+        return cache
+
+    def snapshot_slot_state(self, cache: dict, slot: int) -> dict:
+        """Host copies of the slot's **non-paged** per-slot cache state —
+        local-attention ring buffers and recurrent (rglru/slstm/mlstm)
+        states of hybrid architectures live in monolithic batch-dim
+        leaves next to the page pools, hold no page ids, and would be
+        clobbered by the next request admitted to the slot.  Preemption
+        stashes them with this and reinstalls via
+        :func:`restore_slot_state` on resume."""
+        snap = {}
+        for section, name, kind, stacked in self._groups():
+            if kind in PAGED_KINDS:
+                continue
+            axis = 1 if stacked else 0
+            snap[(section, name)] = jax.tree_util.tree_map(
+                lambda x: np.asarray(
+                    jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=axis)),
+                cache[section][name])
+        return snap
+
+    def restore_slot_state(self, cache: dict, slot: int,
+                           snap: dict) -> dict:
+        """Inverse of :func:`snapshot_slot_state` (bit-exact: the state
+        never leaves its original dtype/bit pattern)."""
+        cache = dict(cache)
+        for (section, name), sub in snap.items():
+            axis = 1 if section == "units" else 0
+            cache[section] = {**cache[section], name: jax.tree_util.tree_map(
+                lambda full, fr: jax.lax.dynamic_update_slice_in_dim(
+                    full, jnp.asarray(fr).astype(full.dtype), slot,
+                    axis=axis),
+                cache[section][name], sub)}
+        return cache
+
+    def detach_slot(self, slot: int):
+        """Pop a preempted slot's host state -> (page list, skip set).
+
+        Every entry must already be swapped (call :func:`evict` first);
+        the engine stashes the result in its preemption record and
+        reinstalls it with :func:`attach_slot` on resume."""
+        pages = self._slot_pages.pop(slot)
+        assert all(e < 0 for e in pages), \
+            f"detach_slot({slot}): resident pages remain {pages}"
+        return pages, self._skip.pop(slot, set())
+
+    def attach_slot(self, cache: dict, slot: int, pages, skip):
+        """Reinstall a preempted slot's page list (all swap sentinels) and
+        page-table row; follow with :func:`fault` to make it resident."""
+        self._slot_pages[slot] = list(pages)
+        self._skip[slot] = set(skip)
+        row = np.zeros(self.pages_per_slot, np.int32)
+        row[: len(pages)] = pages
+        cache = dict(cache)
+        cache["page_table"] = cache["page_table"].at[slot].set(
+            jnp.asarray(row))
         return cache
 
     # -- cold compression --------------------------------------------------
@@ -480,22 +766,25 @@ class PagedKVCache:
         raw = sum(1 for pages in self._slot_pages.values()
                   for e in pages if GARBAGE_PAGE < e < self.n_pages)
         cold = len(self._cold_bytes)
+        swapped = sum(1 for pages in self._slot_pages.values()
+                      for e in pages if e < 0)
         per_shard = [0] * self.n_shards
         for slot, pages in self._slot_pages.items():
             per_shard[self.shard_of_slot(slot)] += sum(
-                1 for e in pages if e != GARBAGE_PAGE)
+                1 for e in pages if e > GARBAGE_PAGE)
         page_bytes = (self.n_attn_layers * 2 * self.page_elems
                       * self.dtype.itemsize)
         cold_uniform = self.n_attn_layers * 2 * (
             self.stride_budget * LANES + self.sm_nbytes
             + 4 * (3 * self.max_code_len + self.n_sym))
-        return {
+        out = {
             "page_size": self.page_size,
             "n_shards": self.n_shards,
             "pages_in_use_per_shard": per_shard,
             "free_pages_per_shard": self.free_pages_per_shard,
             "pages_in_use": raw,
             "cold_pages_in_use": cold,
+            "swapped_pages": swapped,
             "page_bytes": page_bytes,
             "raw_bytes_in_use": raw * page_bytes,
             "cold_bytes_ragged": sum(self._cold_bytes.values()),
@@ -506,3 +795,6 @@ class PagedKVCache:
             "monolithic_bytes": self.max_batch * self.pages_per_slot
             * page_bytes,
         }
+        if self.swap is not None:
+            out.update(self.swap.stats())
+        return out

@@ -65,6 +65,23 @@ def main(argv=None):
                          "mesh); monolithic relies on GSPMD cache "
                          "sharding instead.")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="raw page-pool size (default: worst case).  Set "
+                         "it below the worst case to oversubscribe the "
+                         "pool; with --swap-bytes the engine then swaps/"
+                         "preempts instead of failing with OutOfPages.")
+    ap.add_argument("--swap-bytes", type=int, default=0,
+                    help="host swap-tier capacity in bytes for entropy-"
+                         "coded evicted pages (-1 = unbounded, 0 = "
+                         "disabled).  Enables serving workloads whose "
+                         "aggregate page demand exceeds the device pool, "
+                         "bit-identically.")
+    ap.add_argument("--preemption", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="allow whole-request preemption (compress + swap "
+                         "out a victim, requeue, resume later).  Requires "
+                         "--swap-bytes; --no-preemption restores the "
+                         "seed's stall-and-raise admission.")
     ap.add_argument("--mesh", default=None, metavar="D[xM]",
                     help="serve on a (data=D[, model=M]) device mesh, e.g. "
                          "'2' or '2x2'.  Needs D*M visible devices (on CPU "
@@ -124,7 +141,10 @@ def main(argv=None):
     cache_kw = dict(
         cache_mode="monolithic" if args.cache == "monolithic" else "paged",
         page_size=args.page_size,
+        n_pages=args.n_pages,
         compress_cold=args.cache == "paged-compressed",
+        swap_bytes=args.swap_bytes,
+        preemption=args.preemption,
     )
     mon = KVCacheMonitor()
     eng = GenerationEngine(params_c, cfg, max_batch=args.max_batch,
@@ -156,6 +176,13 @@ def main(argv=None):
                           for k in range(eng.paged.n_shards)]
             print(f"[serve] pages-per-shard peak {peak_shard} "
                   f"(free now {eng.paged.free_pages_per_shard})")
+        if "peak_swap_bytes" in s:
+            print(f"[serve] swap tier: peak host-resident "
+                  f"{s['peak_swap_bytes'] / 1e6:.3f}MB, traffic out/in "
+                  f"{s['swap_out_bytes_total'] / 1e6:.3f}/"
+                  f"{s['swap_in_bytes_total'] / 1e6:.3f}MB, "
+                  f"{s['n_preempted']} preemptions "
+                  f"({s['n_resumed']} resumed)")
 
     if args.check_lossless and args.compress != "none":
         eng2 = GenerationEngine(params_fp8, cfg, max_batch=args.max_batch,

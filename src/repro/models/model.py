@@ -212,6 +212,13 @@ def _self_attention_decode(p, x, cfg: ArchConfig, kind: str, dtype, cache,
     if "k_pool" in cache:
         from .decode_sharded import (paged_decode_attention_sharded,
                                      paged_shardable)
+        # fault-before-gather: negative page-table entries are swap
+        # sentinels (``kvcache.swap`` holds the page on the host).  The
+        # engine faults every *active* slot fully resident before the
+        # step, so a sentinel can only belong to a vacated slot whose
+        # rows are never read — clamp it to the garbage page so the
+        # unconditional scatter/gather below stays in bounds.
+        page_table = jnp.maximum(page_table, paged_kv.GARBAGE_PAGE)
         if paged_shardable(cache, page_table, cur_len, mesh):
             # mesh-sharded paged path: pool/table shard over the batch
             # axes (per-shard page ranges, fully local scatter/gather);

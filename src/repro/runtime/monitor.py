@@ -81,10 +81,13 @@ class StragglerMonitor:
 class KVCacheMonitor:
     """Per-step KV-cache memory accounting for the paged serving engine.
 
-    The engine records ``PagedKVCache.stats()`` after every decode step;
-    ``summary()`` reduces the trace to the numbers the serving report
-    prints: peak/mean paged bytes vs the monolithic ``(B, max_len)``
-    cache it replaced, and the cold-page compression ratio."""
+    The engine records ``PagedKVCache.stats()`` (merged with the
+    scheduler's counters) after every decode step; ``summary()`` reduces
+    the trace to the numbers the serving report prints: peak/mean paged
+    bytes vs the monolithic ``(B, max_len)`` cache it replaced, the
+    cold-page compression ratio, and — when the swap tier is attached —
+    swap traffic (cumulative swap-in/out bytes, peak host-resident
+    bytes) and preemption counts."""
 
     samples: list = field(default_factory=list)
 
@@ -111,7 +114,8 @@ class KVCacheMonitor:
         cold_peak = max(self.samples,
                         key=lambda s: s["cold_pages_in_use"] * s["page_bytes"])
         cold_raw = cold_peak["cold_pages_in_use"] * cold_peak["page_bytes"]
-        return {
+        last = self.samples[-1]
+        out = {
             "steps": len(self.samples),
             "monolithic_bytes": mono,
             "peak_paged_bytes": peak,
@@ -123,3 +127,15 @@ class KVCacheMonitor:
                                        / cold_raw
                                        if cold_raw else float("nan")),
         }
+        if "swap_bytes_used" in last:     # swap tier attached
+            out.update({
+                "peak_swap_bytes": max(s.get("swap_bytes_used", 0)
+                                       for s in self.samples),
+                "peak_swapped_pages": max(s.get("swapped_pages", 0)
+                                          for s in self.samples),
+                "swap_out_bytes_total": last.get("swap_out_bytes_total", 0),
+                "swap_in_bytes_total": last.get("swap_in_bytes_total", 0),
+                "n_preempted": last.get("n_preempted", 0),
+                "n_resumed": last.get("n_resumed", 0),
+            })
+        return out

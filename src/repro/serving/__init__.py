@@ -1,2 +1,3 @@
-from .sampler import greedy, sample_logits  # noqa: F401
+from .sampler import filter_logits, greedy, sample_logits  # noqa: F401
 from .engine import GenerationEngine, Request  # noqa: F401
+from .scheduler import Preempted, Scheduler  # noqa: F401

@@ -24,6 +24,17 @@ hold the pages they wrote, and full (cold) pages can be entropy-coded
 losslessly in place (``compress_cold=True``) with in-graph decode-on-use —
 the cache-side mirror of the paper's weight story.
 
+With a **swap tier** (``swap_bytes``) the device pool stops being a hard
+ceiling: admission is scheduled against *virtual* capacity
+(``serving.scheduler.Scheduler`` — priority classes, FIFO within a
+class), and when pages run out a whole victim request is compressed and
+swapped to host memory (``kvcache.swap.SwapStore``), requeued, and later
+resumed by faulting its pages back — bit-identical to a run that was
+never preempted, because page restore is lossless and sampling keys are
+folded from ``(rng_seed, request.id, position)`` only.  The engine
+faults every active slot fully resident before each decode step
+(fault-before-gather), so the jitted graph never sees a swapped page.
+
 Under a JAX **mesh** the paged cache stays paged: the page pool, cold
 pool, page table and per-slot timelines shard over the mesh's batch axes
 (``runtime.sharding.batch_axes``), the allocator keeps one free list per
@@ -41,7 +52,6 @@ from __future__ import annotations
 
 import itertools
 import warnings
-from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -49,11 +59,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.kvcache import OutOfPages, PagedKVCache
+from repro.kvcache import OutOfPages, PagedKVCache, SwapStore
 from repro.kvcache.paged import restore_cold, strip_cold
+from repro.kvcache.swap import SwapExhausted
 from repro.models import model as M
 from repro.runtime import sharding as SH
 from .sampler import greedy, sample_logits
+from .scheduler import Preempted, Scheduler
 
 _ids = itertools.count()
 
@@ -63,9 +75,26 @@ class Request:
     prompt: list
     max_new_tokens: int = 32
     temperature: float = 0.0
+    priority: int = 0           # higher runs first; FIFO within a class
     id: int = field(default_factory=lambda: next(_ids))
     out_tokens: list = field(default_factory=list)
     done: bool = False
+
+
+# one jitted prefill/decode pair per (cfg, mesh, max_len) — engines are
+# cheap, throwaway objects (tests build hundreds); sharing the jit cache
+# across instances avoids recompiling identical programs
+_STEP_CACHE: dict = {}
+
+
+def _jitted_steps(cfg: ArchConfig, mesh, max_len: int):
+    key = (cfg, mesh, max_len)
+    if key not in _STEP_CACHE:
+        _STEP_CACHE[key] = (
+            jax.jit(lambda p, t, c: M.decode_step(p, cfg, t, c, mesh=mesh)),
+            jax.jit(lambda p, t: M.prefill(p, cfg, t, mesh=mesh,
+                                           max_len=max_len)))
+    return _STEP_CACHE[key]
 
 
 def _splice(full, frag, slot: int, path_names):
@@ -105,18 +134,26 @@ class GenerationEngine:
                  max_len: int = 512, mesh=None, rng_seed: int = 0,
                  cache_mode: str = "paged", page_size: int = 16,
                  n_pages: int | None = None, compress_cold: bool = False,
-                 n_cold_slots: int | None = None, kv_monitor=None):
+                 n_cold_slots: int | None = None, kv_monitor=None,
+                 swap_bytes: int | None = None, preemption: bool = True):
         """``mesh``: optional ``jax.sharding.Mesh``; the paged cache shards
         over its batch axes (see module docstring) and decode/prefill steps
         are jitted against it.  ``cache_mode``/``page_size``/``n_pages``/
         ``compress_cold``/``n_cold_slots`` configure the paged cache
         (``kvcache.PagedKVCache``); ``kv_monitor`` (``runtime.monitor.
-        KVCacheMonitor``) records per-step memory stats."""
+        KVCacheMonitor``) records per-step memory stats.
+
+        ``swap_bytes`` enables the host swap tier: a positive value caps
+        resident swapped bytes, ``-1`` is unbounded, ``None``/``0``
+        disables swapping (and with it preemption).  ``preemption``
+        gates whole-request preemption on top of an enabled swap tier —
+        with it off, the swap tier is never used (there is no other
+        eviction source) and admission behaves like the seed engine."""
         self.params, self.cfg = params, cfg
         self.max_batch, self.max_len = max_batch, max_len
         self.mesh = mesh
-        self.queue: deque = deque()
         self.slots: list = [None] * max_batch   # Request or None
+        self._inflight: list = []               # submitted, not yet returned
         # fall back to the monolithic cache for encoder-decoders and pure
         # recurrent stacks (nothing to page); meshes are served paged, with
         # pool/table sharded over the batch axes — unless the batch-axes
@@ -143,6 +180,10 @@ class GenerationEngine:
                 page_size=page_size, n_pages=n_pages,
                 compress_cold=compress_cold, n_cold_slots=n_cold_slots,
                 n_shards=n_shards)
+            if swap_bytes:
+                self.paged.attach_swap(SwapStore(
+                    capacity_bytes=None if swap_bytes < 0 else swap_bytes,
+                    n_shards=n_shards))
             self.cache = self.paged.init_cache()
             if mesh is not None:
                 # pin the pool/table/cur_len layout so every decode step
@@ -154,58 +195,150 @@ class GenerationEngine:
             self.cache = M.init_cache(cfg, max_batch, max_len,
                                       dtype=jnp.dtype(cfg.dtype),
                                       per_slot=True)
+        self.scheduler = Scheduler(paged=self.paged, preemption=preemption)
         self._host_len = [0] * max_batch        # next write position per slot
-        self.rng = jax.random.PRNGKey(rng_seed)
-        self._decode = jax.jit(
-            lambda p, t, c: M.decode_step(p, cfg, t, c, mesh=mesh))
-        self._prefill = jax.jit(
-            lambda p, t: M.prefill(p, cfg, t, mesh=mesh, max_len=max_len))
+        # sampling keys fold (rng_seed, request.id, position) — the token
+        # stream of a sampled request is a pure function of its own state,
+        # independent of batching, scheduling and preemption
+        self.rng0 = jax.random.PRNGKey(rng_seed)
+        self._decode, self._prefill = _jitted_steps(cfg, mesh, max_len)
         self.last_tok = jnp.zeros((max_batch, 1), jnp.int32)
         self.steps = 0
 
     # -- scheduling --------------------------------------------------------
 
     def submit(self, req: Request):
-        self.queue.append(req)
+        self.scheduler.submit(req)
+        self._inflight.append(req)
+
+    def _start(self, slot: int, req: Request):
+        """Prefill a fresh request and splice it into ``slot``."""
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, frag = self._prefill(self.params, toks)
+        if self.paged is not None:
+            self.cache = self.paged.admit(self.cache, slot, frag,
+                                          len(req.prompt))
+        else:
+            self.cache = splice_fragment(self.cache, frag, slot)
+        self._host_len[slot] = len(req.prompt)
+        tok = self._sample_one(logits, req)
+        req.out_tokens.append(int(tok))
+        self.last_tok = self.last_tok.at[slot, 0].set(tok)
+        self.slots[slot] = req
+
+    def _resume(self, slot: int, st: Preempted):
+        """Re-splice a preempted request: reinstall its page list, fault
+        every page back (lossless restore), reinstall any non-paged
+        per-slot state (hybrid archs) and rebuild the slot timeline —
+        the continuation is bit-identical to an unpreempted run."""
+        self.cache = self.paged.attach_slot(self.cache, slot, st.pages,
+                                            st.skip)
+        self.cache = self.paged.fault(self.cache, slot)
+        if st.state:
+            self.cache = self.paged.restore_slot_state(self.cache, slot,
+                                                       st.state)
+        self.cache = dict(self.cache)
+        self.cache["cur_len"] = self.cache["cur_len"].at[slot].set(
+            st.host_len)
+        self._host_len[slot] = st.host_len
+        self.last_tok = self.last_tok.at[slot, 0].set(st.last_tok)
+        self.slots[slot] = st.req
+        self.scheduler.n_resumed += 1
+
+    def _preempt(self, slot: int) -> bool:
+        """Swap out a whole active request and requeue it (front of its
+        priority class).  Returns False — with the engine state intact —
+        when the swap store cannot take the pages."""
+        req = self.slots[slot]
+        store = self.paged.swap
+        traffic = (store.swap_out_bytes, store.swap_in_bytes,
+                   store.n_swap_out, store.n_swap_in)
+        try:
+            self.cache = self.paged.evict(self.cache, slot)
+        except SwapExhausted:
+            # roll back any partially evicted pages (their device space
+            # was just freed, so the fault cannot itself run dry), and
+            # un-count the aborted attempt so the monitor only reports
+            # swapping that actually happened
+            self.cache = self.paged.fault(self.cache, slot)
+            (store.swap_out_bytes, store.swap_in_bytes,
+             store.n_swap_out, store.n_swap_in) = traffic
+            return False
+        state = self.paged.snapshot_slot_state(self.cache, slot)
+        pages, skip = self.paged.detach_slot(slot)
+        st = Preempted(req=req, pages=pages, skip=skip, state=state,
+                       host_len=self._host_len[slot],
+                       last_tok=int(self.last_tok[slot, 0]))
+        self.slots[slot] = None
+        self.scheduler.n_preempted += 1
+        self.scheduler.requeue(st)
+        return True
 
     def _admit(self):
-        for slot in range(self.max_batch):
-            if self.slots[slot] is not None or not self.queue:
+        """Fill free slots from the scheduler; preempt strictly-lower-
+        priority work when the head of the queue is blocked on pages."""
+        sched = self.scheduler
+        while True:
+            progress = False
+            for slot in range(self.max_batch):
+                if self.slots[slot] is not None:
+                    continue
+                item = sched.pick(slot)
+                if item is None:
+                    continue
+                if isinstance(item, Preempted):
+                    self._resume(slot, item)
+                else:
+                    self._start(slot, item)
+                progress = True
+            if progress:
                 continue
-            if (self.paged is not None
-                    and not self.paged.can_admit(len(self.queue[0].prompt),
-                                                 slot)):
-                # another free slot may live on a shard with pages; if
-                # none does, the post-loop check below decides deadlock
-                continue
-            req = self.queue.popleft()
-            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, frag = self._prefill(self.params, toks)
-            if self.paged is not None:
-                self.cache = self.paged.admit(self.cache, slot, frag,
-                                              len(req.prompt))
-            else:
-                self.cache = splice_fragment(self.cache, frag, slot)
-            self._host_len[slot] = len(req.prompt)
-            tok = self._sample_one(logits, req)
-            req.out_tokens.append(int(tok))
-            self.last_tok = self.last_tok.at[slot, 0].set(tok)
-            self.slots[slot] = req
-        if (self.queue and self.paged is not None
+            head = sched.head()
+            if head is None:
+                break
+            victim = sched.admission_victim(self.slots, head)
+            if victim is None or not self._preempt(victim):
+                break
+        if (sched.waiting and self.paged is not None
                 and not any(s is not None for s in self.slots)):
-            # every slot is free yet none could admit the head request:
-            # no release will ever refill the free lists
+            # every slot is free yet nothing could be admitted: no release
+            # will ever refill the free lists.  Raised only once the
+            # batch has drained, so in-flight work always completes first.
+            bad = sched.impossible()
+            if bad is not None:
+                raise OutOfPages(
+                    f"request {bad.id} needs "
+                    f"{self.paged.pages_worst_case(len(bad.prompt), bad.max_new_tokens)}"
+                    f" resident pages; largest shard holds "
+                    f"{max(self.paged.shard_capacity(k) for k in range(self.paged.n_shards))}"
+                    f" (swap cannot hold a single slot's working set)")
             raise OutOfPages(
-                f"prompt needs more pages than its shard holds (free per "
-                f"shard: {self.paged.free_pages_per_shard})")
+                f"queued work cannot be admitted with an empty batch (free "
+                f"per shard: {self.paged.free_pages_per_shard})")
 
     def _sample_one(self, logits, req: Request):
         if req.temperature <= 0:
             return greedy(logits)[0, 0]
-        self.rng, k = jax.random.split(self.rng)
-        return sample_logits(logits, k, temperature=req.temperature)[0, 0]
+        key = jax.random.fold_in(jax.random.fold_in(self.rng0, req.id),
+                                 len(req.out_tokens))
+        return sample_logits(logits, key, temperature=req.temperature)[0, 0]
 
     # -- stepping ----------------------------------------------------------
+
+    def _ensure_with_pressure(self, slot: int):
+        """Grow ``slot``'s page list for this step's write; on page
+        pressure, preempt victims on the same shard until it fits."""
+        while True:
+            try:
+                self.cache = self.paged.ensure(self.cache, slot,
+                                               self._host_len[slot])
+                return
+            except OutOfPages:
+                victim = self.scheduler.victim(
+                    self.slots, shard=self.paged.shard_of_slot(slot),
+                    exclude=(slot,))
+                if victim is None or not self._preempt(victim):
+                    raise
 
     def step(self) -> bool:
         """Admit + one batched decode step.  Returns False when idle."""
@@ -213,11 +346,20 @@ class GenerationEngine:
         active = [s for s in range(self.max_batch)
                   if self.slots[s] is not None]
         if not active:
-            return bool(self.queue)
+            return self.scheduler.waiting > 0
         if self.paged is not None:
             for s in active:   # grow page lists to cover this step's write
-                self.cache = self.paged.ensure(self.cache, s,
-                                               self._host_len[s])
+                if self.slots[s] is not None:   # may be preempted below
+                    self._ensure_with_pressure(s)
+            active = [s for s in range(self.max_batch)
+                      if self.slots[s] is not None]
+            # fault-before-gather: the decode step must never see a
+            # swapped page of an active slot (normally a no-op; resume
+            # already faults, and whole-request preemption only swaps
+            # vacated slots)
+            for s in active:
+                if self.paged.has_swapped(s):
+                    self.cache = self.paged.fault(self.cache, s)
         # while nothing is cold, run the decode variant without the cold
         # pool (its in-graph entropy decode would be pure waste)
         stash = None
@@ -231,19 +373,30 @@ class GenerationEngine:
                       else new_cache)
         self.steps += 1
         toks = np.asarray(greedy(logits))  # (B, 1)
-        self.rng, k = jax.random.split(self.rng)
-        # one batched sample honoring per-request temperatures: pre-scale
-        # each row's logits by its slot's temperature (1.0 for greedy rows,
-        # whose sampled value is never read)
-        temps = np.asarray([
-            self.slots[s].temperature
-            if self.slots[s] is not None and self.slots[s].temperature > 0
-            else 1.0 for s in range(self.max_batch)], np.float32)
-        sampled = np.asarray(sample_logits(
-            logits / jnp.asarray(temps)[:, None, None], k, temperature=1.0))
+        # one batched draw for every sampled row: per-row keys fold
+        # (rng_seed, request.id, position) — identical values to calling
+        # _sample_one row by row, without k eager dispatches per step
+        samp = [s for s in active if self.slots[s].temperature > 0]
+        sampled = {}
+        if samp:
+            rows = logits[jnp.asarray(samp)]                  # (k, 1, V)
+            ids = jnp.asarray([self.slots[s].id for s in samp], jnp.int32)
+            pos = jnp.asarray([len(self.slots[s].out_tokens) for s in samp],
+                              jnp.int32)
+            temps = jnp.asarray([self.slots[s].temperature for s in samp],
+                                jnp.float32)
+
+            def draw(row, i, p, t):
+                key = jax.random.fold_in(jax.random.fold_in(self.rng0, i),
+                                         p)
+                return sample_logits(row[None] / t, key,
+                                     temperature=1.0)[0, 0]
+
+            got = np.asarray(jax.vmap(draw)(rows, ids, pos, temps))
+            sampled = dict(zip(samp, got.tolist()))
         for s in active:
             req = self.slots[s]
-            t = int(toks[s, 0] if req.temperature <= 0 else sampled[s, 0])
+            t = int(toks[s, 0] if req.temperature <= 0 else sampled[s])
             req.out_tokens.append(t)
             self.last_tok = self.last_tok.at[s, 0].set(t)
             self._host_len[s] += 1
@@ -259,15 +412,20 @@ class GenerationEngine:
                     self.cache = self.paged.compress_cold_pages(
                         self.cache, s, self._host_len[s])
         if self.kv_monitor is not None and self.paged is not None:
-            self.kv_monitor.record(self.paged.stats())
+            stats = self.paged.stats()
+            stats.update(self.scheduler.counters())
+            self.kv_monitor.record(stats)
         return True
 
     def run(self, max_steps: int = 10_000) -> list:
-        """Drain the queue; returns the tracked requests (all done unless
-        ``max_steps`` was hit)."""
-        tracked = list(self.queue)
+        """Drain the queue; returns every submitted request that finished
+        (whether it was queued, already admitted to a slot, or preempted
+        when ``run`` was called — ``submit`` is the tracking point, not
+        the queue snapshot)."""
         for _ in range(max_steps):
             busy = self.step()
             if not busy and not any(s is not None for s in self.slots):
                 break
-        return tracked
+        done = [r for r in self._inflight if r.done]
+        self._inflight = [r for r in self._inflight if not r.done]
+        return done

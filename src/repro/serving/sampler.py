@@ -1,4 +1,12 @@
-"""Token samplers (pure functions over final-position logits)."""
+"""Token samplers (pure functions over final-position logits).
+
+``filter_logits`` is the masking stage exposed on its own so its
+invariants are directly testable (tests/test_sampler.py): surviving
+logits keep their *original* values (masking never renormalizes over
+excluded entries — renormalization happens implicitly in the final
+softmax over the survivors), the greedy token always survives, and
+top-k/top-p select exactly the documented sets.
+"""
 from __future__ import annotations
 
 import jax
@@ -10,13 +18,14 @@ def greedy(logits):
     return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
 
 
-def sample_logits(logits, rng, *, temperature: float = 1.0,
-                  top_k: int = 0, top_p: float = 0.0):
-    """Temperature / top-k / top-p sampling.  logits (B, 1, V) -> (B, 1)."""
-    x = logits[:, -1, :].astype(jnp.float32)
-    if temperature <= 0.0:
-        return greedy(logits)
-    x = x / temperature
+def filter_logits(x, *, top_k: int = 0, top_p: float = 0.0):
+    """Mask logits ``x`` (B, V) float32 to the sampling support.
+
+    top-k keeps the k largest entries; top-p keeps the smallest set whose
+    softmax mass reaches ``top_p``.  Excluded entries become ``-inf``;
+    included entries are returned **unchanged** (no renormalization at
+    this stage), so downstream ``softmax``/``categorical`` distributes
+    mass proportionally to the original logits."""
     if top_k:
         kth = jax.lax.top_k(x, top_k)[0][..., -1:]
         x = jnp.where(x < kth, -jnp.inf, x)
@@ -28,5 +37,19 @@ def sample_logits(logits, rng, *, temperature: float = 1.0,
         cutoff_idx = jnp.argmax(cum >= top_p, axis=-1)
         cutoff = jnp.take_along_axis(srt, cutoff_idx[:, None], axis=-1)
         x = jnp.where(x < cutoff, -jnp.inf, x)
+    return x
+
+
+def sample_logits(logits, rng, *, temperature: float = 1.0,
+                  top_k: int = 0, top_p: float = 0.0):
+    """Temperature / top-k / top-p sampling.  logits (B, 1, V) -> (B, 1).
+
+    ``temperature <= 0`` is exact greedy (argmax, no randomness); for a
+    fixed ``rng`` the result is deterministic and identical under
+    ``jax.jit`` (tests/test_sampler.py)."""
+    x = logits[:, -1, :].astype(jnp.float32)
+    if temperature <= 0.0:
+        return greedy(logits)
+    x = filter_logits(x / temperature, top_k=top_k, top_p=top_p)
     tok = jax.random.categorical(rng, x, axis=-1)
     return tok.astype(jnp.int32)[:, None]

@@ -1,0 +1,251 @@
+"""Preemptive request scheduler: priority admission over virtual capacity.
+
+The engine used to treat the device page pool as a hard ceiling: FIFO
+admission, and ``OutOfPages`` the moment a workload's footprint exceeded
+``n_pages``.  With the swap tier (``kvcache/swap.py``) the pool becomes a
+cache over a much larger *virtual* capacity — device pages + host swap —
+and this module supplies the policy layer:
+
+  * **priority classes** — ``Request.priority`` (higher runs first);
+    FIFO within a class, so priority 0 everywhere reproduces the old
+    admission order exactly.
+  * **admission control against virtual capacity** — a request is queued,
+    not rejected, while its pages are swappable; ``OutOfPages`` is raised
+    only for requests that can *never* fit (their worst-case resident
+    working set exceeds every shard's page range — swap cannot help,
+    because a slot's whole history must be device-resident to gather).
+  * **whole-request preemption** — when a higher-priority request waits
+    or an active slot cannot grow, the victim (lowest priority, then
+    least-recently scheduled) is compressed and swapped out wholesale:
+    the engine evicts all its pages, detaches its host state into a
+    :class:`Preempted` record, and requeues it at the *front* of its
+    priority class.  Resume faults the pages back and re-splices the
+    slot's timeline — bit-identical to a run that was never preempted,
+    because page restore is lossless and greedy/fold-in sampling depends
+    only on the request's own state.
+
+The scheduler is pure host-side policy: it owns the queues and victim
+choice; the engine owns execution (prefill, evict/fault, splicing).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Preempted:
+    """A swapped-out, partially-generated request awaiting resume."""
+
+    req: object                 # serving.engine.Request
+    pages: list                 # all-negative swap sentinels (detach_slot)
+    skip: set                   # incompressible-page indices (preserved)
+    host_len: int               # next cache write position
+    last_tok: int               # last sampled token (decode input on resume)
+    state: dict = field(default_factory=dict)
+    # ^ non-paged per-slot cache state (local-attention rings, recurrent
+    #   states of hybrid archs) — PagedKVCache.snapshot_slot_state
+
+    @property
+    def priority(self) -> int:
+        return self.req.priority
+
+
+@dataclass
+class Scheduler:
+    """Queue + policy.  ``paged`` is the engine's ``PagedKVCache`` (None
+    for the monolithic fallback: every request "fits" and preemption is
+    structurally off)."""
+
+    paged: object = None
+    preemption: bool = True
+    _classes: dict = field(default_factory=dict)   # priority -> deque
+    _clock: int = 0
+    _last_used: dict = field(default_factory=dict)  # slot -> stamp
+    n_preempted: int = 0
+    n_resumed: int = 0
+
+    # -- queue -------------------------------------------------------------
+
+    def submit(self, req) -> None:
+        self._classes.setdefault(req.priority, deque()).append(req)
+
+    def requeue(self, state: Preempted) -> None:
+        """Preempted work resumes before new work of its class."""
+        self._classes.setdefault(state.priority, deque()).appendleft(state)
+
+    @property
+    def waiting(self) -> int:
+        return sum(len(q) for q in self._classes.values())
+
+    def _priorities(self):
+        return sorted((p for p in self._classes if self._classes[p]),
+                      reverse=True)
+
+    def head(self):
+        """Highest-priority *schedulable* waiting item (None when idle);
+        requests that can never fit are passed over — they only surface
+        in :func:`impossible` once the engine has drained."""
+        for p in self._priorities():
+            for item in self._classes[p]:
+                if (self.paged is None or isinstance(item, Preempted)
+                        or self._ever_fits(item)):
+                    return item
+        return None
+
+    def impossible(self):
+        """First queued request whose worst-case resident set fits no
+        shard — the diagnostic for the engine's drained-queue
+        ``OutOfPages`` (never raised while other work is in flight)."""
+        if self.paged is None:
+            return None
+        for p in self._priorities():
+            for item in self._classes[p]:
+                if (not isinstance(item, Preempted)
+                        and not self._ever_fits(item)):
+                    return item
+        return None
+
+    # -- fit tests ---------------------------------------------------------
+
+    def _need_now(self, item) -> int:
+        """Raw pages the item needs resident to start on a slot."""
+        if isinstance(item, Preempted):
+            return len(item.pages)      # conservative: cold slots may help
+        return self.paged.pages_needed(len(item.prompt))
+
+    def _fits(self, item, shard: int) -> bool:
+        """Admissible on ``shard`` *now and for its whole lifetime*: the
+        current need must fit the shard's free list, and the worst-case
+        working set must fit the shard's capacity — placing a request on
+        a shard it will outgrow would wedge it mid-flight with no victim
+        to preempt (it cannot swap its own history)."""
+        if self.paged is None:
+            return True
+        if self._need_now(item) > self.paged.free_pages_per_shard[shard]:
+            return False
+        req = item.req if isinstance(item, Preempted) else item
+        worst = self.paged.pages_worst_case(len(req.prompt),
+                                            req.max_new_tokens)
+        return worst <= self.paged.shard_capacity(shard)
+
+    def _ever_fits(self, req) -> bool:
+        """Whether the request's worst-case resident set fits *some*
+        shard at full capacity (virtual capacity covers total footprint
+        across requests, never one request's simultaneous working set).
+
+        Deliberately conservative: the bound counts raw pages only, even
+        though cold slots could hold some of the working set — cold
+        space is shared and incompressible pages stay raw, so counting
+        it could admit a request that later wedges mid-flight."""
+        worst = self.paged.pages_worst_case(len(req.prompt),
+                                            req.max_new_tokens)
+        return any(worst <= self.paged.shard_capacity(k)
+                   for k in range(self.paged.n_shards))
+
+    def pick(self, slot: int):
+        """Pop the best waiting item admissible on ``slot`` now, or None.
+
+        Strict head-of-line within a priority class: only the class's
+        first *schedulable* item (never-fitting requests are passed
+        over — they can't be admitted by anyone) is considered, so an
+        all-priority-0 workload reproduces the seed engine's FIFO
+        admission order exactly and a large request cannot be starved by
+        smaller ones behind it.  A blocked class head does let lower
+        classes run (utilization over strict priority while waiting)."""
+        if self.paged is None:
+            for p in self._priorities():
+                self.touch(slot)
+                return self._classes[p].popleft()
+            return None
+        shard = self.paged.shard_of_slot(slot)
+        for p in self._priorities():
+            q = self._classes[p]
+            for i, item in enumerate(q):
+                if (not isinstance(item, Preempted)
+                        and not self._ever_fits(item)):
+                    continue        # unschedulable: not head-of-line
+                if self._fits(item, shard):
+                    del q[i]
+                    self.touch(slot)
+                    return item
+                break               # class head blocks in-class backfill
+        return None
+
+    # -- preemption policy -------------------------------------------------
+
+    def touch(self, slot: int) -> None:
+        """LRU stamp: called on admit/resume (victims are the least
+        recently scheduled, not the least recently decoded — every active
+        slot decodes every step)."""
+        self._clock += 1
+        self._last_used[slot] = self._clock
+
+    def _can_preempt(self) -> bool:
+        """Preemption needs an attached swap store with headroom — a
+        full store would make every eviction attempt fail (and roll
+        back), so it disables victim selection until a fault or discard
+        frees bytes."""
+        if not self.preemption or self.paged is None \
+                or self.paged.swap is None:
+            return False
+        store = self.paged.swap
+        return (store.capacity_bytes is None
+                or store.bytes_used < store.capacity_bytes)
+
+    def admission_victim(self, slots, head):
+        """A victim whose eviction provably lets ``head`` admit *now*.
+
+        Strictly-lower-priority active slots only (preempting your own
+        class livelocks), and only when the victim's shard would then
+        hold ``head``'s current page need — so every admission
+        preemption is followed by head's admission in the same pass,
+        never by preempt/resume flapping across steps.  Ties break
+        lowest-priority-first, then least recently scheduled."""
+        if not self._can_preempt():
+            return None
+        need = self._need_now(head)
+        hreq = head.req if isinstance(head, Preempted) else head
+        worst = self.paged.pages_worst_case(len(hreq.prompt),
+                                            hreq.max_new_tokens)
+        best = None
+        for s, req in enumerate(slots):
+            if req is None or req.priority >= head.priority:
+                continue
+            sh = self.paged.shard_of_slot(s)
+            if worst > self.paged.shard_capacity(sh):
+                continue            # head could not *live* on this shard:
+                                    # preempting here would only flap
+            raw = self.paged.resident_raw_pages(s)
+            if self.paged.free_pages_per_shard[sh] + raw < need:
+                continue            # would not unblock head: keep running
+            cand = (req.priority, self._last_used.get(s, 0), s)
+            best = cand if best is None else min(best, cand)
+        return best[2] if best is not None else None
+
+    def victim(self, slots, *, shard=None, exclude=()):
+        """Choose a page-pressure victim among active ``slots`` (a list
+        of Request-or-None): lowest priority first, then least recently
+        scheduled — any priority qualifies, because the slot under
+        pressure cannot write at all until pages free up and it keeps
+        decoding either way (progress is monotone).  ``shard`` restricts
+        to slots whose pages live on that shard (free lists are
+        per-shard); ``exclude`` protects the slot under pressure."""
+        if not self._can_preempt():
+            return None
+        cands = []
+        for s, req in enumerate(slots):
+            if req is None or s in exclude:
+                continue
+            if shard is not None and self.paged.shard_of_slot(s) != shard:
+                continue
+            if self.paged.resident_raw_pages(s) == 0:
+                continue        # holds no raw pages: evicting it would
+                                # cost swap traffic and relieve nothing
+            cands.append((req.priority, self._last_used.get(s, 0), s))
+        return min(cands)[2] if cands else None
+
+    def counters(self) -> dict:
+        return {"n_preempted": self.n_preempted,
+                "n_resumed": self.n_resumed,
+                "queue_depth": self.waiting}

@@ -8,6 +8,19 @@ import textwrap
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+try:
+    # Two example budgets for the property suites: "tier1" keeps the
+    # default run fast (tests that pin their own ``@settings`` are
+    # unaffected); the tier-2 ``tests-extended`` CI job raises it with
+    # ``--hypothesis-profile=ci`` (the pytest plugin's CLI flag wins over
+    # the ``load_profile`` default below).
+    from hypothesis import settings as _hyp_settings
+    _hyp_settings.register_profile("tier1", max_examples=5, deadline=None)
+    _hyp_settings.register_profile("ci", max_examples=40, deadline=None)
+    _hyp_settings.load_profile("tier1")
+except ImportError:
+    pass
+
 
 def pytest_configure(config):
     config.addinivalue_line(

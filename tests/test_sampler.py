@@ -1,0 +1,134 @@
+"""Sampler properties (ISSUE 3): greedy limit, mask semantics, determinism.
+
+``filter_logits`` is the testable masking stage: it must *never*
+renormalize over excluded logits — survivors keep their original values
+(the final softmax renormalizes implicitly over the support), the greedy
+token always survives, and top-k / top-p select exactly the documented
+sets.  ``sample_logits`` must be exact greedy at ``temperature <= 0`` and
+bit-deterministic for a fixed key, jitted or not.
+"""
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.serving.sampler import filter_logits, greedy, sample_logits
+
+try:
+    from hypothesis import given, strategies as st
+except ImportError:
+    given = None
+
+
+def _rand_logits(seed, B=2, V=17):
+    rng = np.random.default_rng(seed)
+    # distinct values: tie-free argmax/cutoffs keep assertions exact
+    x = rng.permutation(B * V).astype(np.float32).reshape(B, V)
+    return jnp.asarray(x + rng.uniform(0, 0.25, (B, V)).astype(np.float32))
+
+
+def test_temperature_zero_is_exact_greedy():
+    logits = _rand_logits(0)[:, None, :]
+    want = greedy(logits)
+    for t in (0.0, -1.0):
+        got = sample_logits(logits, jax.random.PRNGKey(3), temperature=t)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # the limit t -> 0+ agrees with greedy too (mass collapses to argmax)
+    got = sample_logits(logits, jax.random.PRNGKey(3), temperature=1e-5)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_top_k_mask_keeps_original_logits():
+    """top-k keeps exactly k survivors, each with its *original* value —
+    masking never renormalizes or shifts the included logits."""
+    x = _rand_logits(1)
+    for k in (1, 3, x.shape[-1]):
+        m = np.asarray(filter_logits(x, top_k=k))
+        xs = np.asarray(x)
+        for b in range(x.shape[0]):
+            kept = np.isfinite(m[b])
+            assert kept.sum() == k
+            np.testing.assert_array_equal(m[b][kept], xs[b][kept])
+            assert np.all(m[b][~kept] == -np.inf)
+            # survivors are precisely the k largest
+            assert set(np.flatnonzero(kept)) == set(
+                np.argsort(xs[b])[-k:])
+
+
+def test_top_p_mask_is_smallest_covering_set_unrenormalized():
+    """top-p keeps the smallest set with softmax mass >= p; survivors
+    keep their original values, so renormalization happens only in the
+    downstream softmax over the support (never over excluded logits)."""
+    x = _rand_logits(2)
+    xs = np.asarray(x, np.float64)
+    for p in (0.1, 0.5, 0.9):
+        m = np.asarray(filter_logits(x, top_p=p))
+        for b in range(x.shape[0]):
+            kept = np.isfinite(m[b])
+            np.testing.assert_array_equal(m[b][kept],
+                                          np.asarray(x)[b][kept])
+            probs = np.exp(xs[b] - xs[b].max())
+            probs /= probs.sum()
+            order = np.argsort(-probs)
+            mass = np.cumsum(probs[order])
+            n_min = int(np.searchsorted(mass, p) + 1)   # smallest covering
+            assert set(np.flatnonzero(kept)) == set(order[:n_min])
+            # the greedy token always survives
+            assert kept[np.argmax(xs[b])]
+            # dropping the weakest survivor would fall below p
+            if n_min > 1:
+                assert mass[n_min - 2] < p <= mass[n_min - 1] + 1e-12
+
+
+def test_combined_masks_and_sampling_support():
+    """Sampled tokens always come from the masked support."""
+    x = _rand_logits(3, B=8, V=11)
+    logits = x[:, None, :]
+    m = np.asarray(filter_logits(x, top_k=4, top_p=0.8))
+    support = [set(np.flatnonzero(np.isfinite(m[b]))) for b in range(8)]
+    for s in range(20):
+        tok = np.asarray(sample_logits(logits, jax.random.PRNGKey(s),
+                                       temperature=1.0, top_k=4, top_p=0.8))
+        for b in range(8):
+            assert int(tok[b, 0]) in support[b], (b, s)
+
+
+def test_fixed_seed_deterministic_across_jit():
+    """A fixed key samples the same token eagerly, re-invoked, and under
+    ``jax.jit`` — the engine's fold-in sampling relies on this."""
+    logits = _rand_logits(4, B=4, V=29)[:, None, :]
+    jitted = jax.jit(functools.partial(sample_logits, temperature=0.7,
+                                       top_k=5, top_p=0.9))
+    for seed in range(5):
+        key = jax.random.PRNGKey(seed)
+        eager1 = sample_logits(logits, key, temperature=0.7, top_k=5,
+                               top_p=0.9)
+        eager2 = sample_logits(logits, key, temperature=0.7, top_k=5,
+                               top_p=0.9)
+        jit1 = jitted(logits, key)
+        np.testing.assert_array_equal(np.asarray(eager1), np.asarray(eager2))
+        np.testing.assert_array_equal(np.asarray(eager1), np.asarray(jit1))
+
+
+if given is not None:
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 16),
+           st.floats(0.05, 0.999))
+    def test_mask_invariants_hold_for_any_draw(seed, k, p):
+        """Property: for any logits, k, p — survivors keep original
+        values, the greedy token survives, and |top-k support| <= k."""
+        x = _rand_logits(seed, B=3, V=16)
+        xs = np.asarray(x)
+        m = np.asarray(filter_logits(x, top_k=k, top_p=float(p)))
+        for b in range(x.shape[0]):
+            kept = np.isfinite(m[b])
+            assert kept.sum() >= 1
+            assert kept.sum() <= k
+            assert kept[np.argmax(xs[b])]
+            np.testing.assert_array_equal(m[b][kept], xs[b][kept])
+
+
+def test_greedy_shape_and_dtype():
+    logits = _rand_logits(5)[:, None, :]
+    g = greedy(logits)
+    assert g.shape == (2, 1) and g.dtype == jnp.int32
