@@ -16,9 +16,11 @@ from repro.core import fixedrate, stats, tpu_format
 from .common import timed
 
 
-def run(verbose: bool = True):
+def run(verbose: bool = True, sizes=(1 << 16, 1 << 20, 1 << 22)):
+    """``sizes`` overrides the decoded-element counts — the perf-smoke CI
+    tier runs just the smallest shape to keep the job fast."""
     rows = []
-    for n in (1 << 16, 1 << 20, 1 << 22):
+    for n in sizes:
         bits = stats.synthesize_fp8_weights((n,), alpha=1.9, seed=n % 11)
         ct = tpu_format.encode(bits)
         cf = fixedrate.encode(bits)

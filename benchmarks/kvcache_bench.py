@@ -121,6 +121,7 @@ def run(verbose: bool = True):
     assert s["peak_paged_bytes"] < s["monolithic_bytes"]
 
     over = run_oversubscribed(verbose=verbose)
+    mixed = run_mixed(verbose=verbose)
     sharded = run_sharded(verbose=verbose)
     return {
         "layers": len(rows),
@@ -129,8 +130,98 @@ def run(verbose: bool = True):
         "paged_vs_monolithic": s["paged_vs_monolithic"],
         "cold_compression_ratio": s["cold_compression_ratio"],
         "oversubscribed": over,
+        "mixed": mixed,
         "sharded": sharded,
     }
+
+
+# long-prompt/short-prompt mix for the chunked-prefill TTFT benchmark: the
+# long prompts monopolize whole-prompt prefill while the short requests
+# wait; chunked prefill bounds that head-of-line blocking per step
+MIXED_WORKLOAD = (
+    [48, 4, 40, 6, 3, 44, 8, 5],                        # prompt lengths
+    [12, 10, 12, 10, 12, 10, 12, 10],                   # max_new_tokens
+)
+
+
+def _mixed_stream(cfg, id_base=20_000):
+    rng = np.random.default_rng(7)
+    lens, news = MIXED_WORKLOAD
+    return [Request(prompt=rng.integers(1, cfg.vocab_size, size=n).tolist(),
+                    max_new_tokens=m, id=id_base + i)
+            for i, (n, m) in enumerate(zip(lens, news))]
+
+
+def run_mixed(verbose: bool = True):
+    """Chunked vs whole-prompt prefill on a mixed long/short stream.
+
+    Drives ``engine.step()`` by hand and records, per request, the
+    host wall-clock **time to first token** (submit -> first sampled
+    token) plus end-to-end decode tokens/s; asserts the chunked engine's
+    tokens are bit-identical to the whole-prompt engine's and that the
+    chunk path compiled exactly one prefill program for every prompt
+    length in the stream (the whole-prompt engine compiles one per
+    distinct length).  These numbers seed ``BENCH_serving.json`` in the
+    perf-smoke CI tier (``benchmarks/perf_smoke.py``)."""
+    import time
+    cfg = smoke_variant(get(ARCHS[0]))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    short = {i for i, n in enumerate(MIXED_WORKLOAD[0]) if n <= 8}
+
+    def serve(**kw):
+        eng = GenerationEngine(params, cfg, max_batch=4, max_len=64,
+                               page_size=16, **kw)
+        # the jitted-step caches are process-shared across engines, so
+        # report the *delta* this stream caused
+        c0 = eng.prefill_compile_count()
+        reqs = _mixed_stream(cfg)
+        for r in reqs:
+            eng.submit(r)
+        ttft = {}
+        t0 = time.perf_counter()
+        for _ in range(10_000):
+            busy = eng.step()
+            now = time.perf_counter() - t0
+            for i, r in enumerate(reqs):
+                if r.out_tokens and i not in ttft:
+                    ttft[i] = now
+            if not busy and not any(s is not None for s in eng.slots):
+                break
+        dt = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        toks = sum(len(r.out_tokens) for r in reqs)
+        return {
+            "tokens": [r.out_tokens for r in reqs],
+            "tok_per_s": toks / max(dt, 1e-9),
+            "ttft_mean_s": sum(ttft.values()) / len(ttft),
+            "ttft_short_mean_s": (sum(ttft[i] for i in short)
+                                  / len(short)),
+            "steps": eng.steps,
+            "prefill_compiles": eng.prefill_compile_count() - c0,
+        }
+
+    whole = serve()
+    chunked = serve(prefill_chunk=16)
+    assert chunked.pop("tokens") == whole.pop("tokens"), \
+        "chunked prefill deviated from the whole-prompt engine"
+    # one chunk program serves every prompt length (0 when an earlier
+    # engine in this process already traced it); the whole-prompt engine
+    # retraces per distinct length not yet seen by the shared jit cache
+    assert chunked["prefill_compiles"] <= 1, chunked["prefill_compiles"]
+    assert whole["prefill_compiles"] >= chunked["prefill_compiles"]
+    out = {"whole": whole, "chunked": chunked,
+           "prompt_lengths": sorted(set(MIXED_WORKLOAD[0]))}
+    if verbose:
+        print(f"\nmixed long/short stream ({ARCHS[0]}, batch 4, "
+              f"{len(MIXED_WORKLOAD[0])} requests, prompt lengths "
+              f"{out['prompt_lengths']}):")
+        for name, r in (("whole-prompt", whole), ("chunked(16)", chunked)):
+            print(f"  {name:12s} {r['tok_per_s']:8.1f} tok/s  TTFT mean "
+                  f"{r['ttft_mean_s'] * 1e3:7.1f} ms (short "
+                  f"{r['ttft_short_mean_s'] * 1e3:7.1f} ms)  "
+                  f"{r['prefill_compiles']} prefill compile(s)")
+        print("  chunked tokens bit-identical to whole-prompt: True")
+    return out
 
 
 # mixed-length, mixed-priority stream sized so its aggregate page demand

@@ -1,0 +1,190 @@
+"""Perf-smoke tier: small-shape serving/decode benchmarks + regression gate.
+
+Runs in minutes on a CPU CI runner and writes ``BENCH_serving.json`` —
+the first point of the repo's benchmark trajectory:
+
+  * ``serving``  — the mixed long/short-prompt stream through the
+    chunked-prefill engine (``kvcache_bench.run_mixed``): decode
+    tokens/s, mean TTFT, prefill compile counts (chunked must stay at
+    <= 1 per process; the whole-prompt engine's per-length count is the
+    contrast figure);
+  * ``oversubscribed`` — the deterministic swap/preemption workload
+    (``kvcache_bench.run_oversubscribed``): swap traffic bytes and
+    preemption counts (bit-identity is asserted inside);
+  * ``decode`` — the ECF8 decode microbench at its smallest shape
+    (``decode_microbench``): MB/s of the jnp and fixed-rate paths.
+
+``--check BASELINE`` compares against a committed baseline
+(``benchmarks/baselines/BENCH_serving.json``) and **fails on a > 30 %
+regression**.  Wall-clock metrics are normalized by a machine-speed
+probe (a fixed numpy matmul timed in the same process) so the gate
+tracks code regressions rather than runner-hardware variance; counter
+metrics (compile counts, preemptions) must not grow at all, and swap
+traffic bytes stay inside the same 30 % band.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.perf_smoke --out BENCH_serving.json \
+      --check benchmarks/baselines/BENCH_serving.json
+  PYTHONPATH=src python -m benchmarks.perf_smoke --out \
+      benchmarks/baselines/BENCH_serving.json          # refresh baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+TOLERANCE = 0.30
+
+# metric path -> direction ("higher"/"lower" is better, probe-normalized;
+# "count" must not increase; "band" must stay within TOLERANCE either way)
+GATES = {
+    ("serving", "chunked_tok_per_s"): "higher",
+    ("serving", "chunked_ttft_mean_s"): "lower",
+    ("serving", "chunked_prefill_compiles"): "count",
+    ("oversubscribed", "swap_out_bytes"): "band",
+    ("oversubscribed", "swap_in_bytes"): "band",
+    ("oversubscribed", "n_preempted"): "count",
+    ("decode", "tpu_jnp_MBps"): "higher",
+    ("decode", "fr_MBps"): "higher",
+}
+_TIMED = ("higher", "lower")
+
+
+def machine_probe_mflops() -> float:
+    """MFLOP/s of a fixed f32 matmul — the machine-speed proxy that
+    normalizes wall-clock gates across CI runners.  Best-of-5 trials of
+    the *minimum* per-call time: the fastest observation is the stable
+    one (scheduling noise only ever slows a call down)."""
+    a = np.random.default_rng(0).standard_normal((384, 384)).astype(
+        np.float32)
+    for _ in range(3):
+        a @ a
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        n = 10
+        for _ in range(n):
+            (a @ a).sum()
+        best = min(best, (time.perf_counter() - t0) / n)
+    return 2 * 384 ** 3 / best / 1e6
+
+
+def collect(verbose: bool = True, repeats: int = 3) -> dict:
+    """Gather the smoke metrics.  Timed benches run ``repeats`` times and
+    keep their **best** observation (load spikes only ever slow a run
+    down — best-of is the stable statistic on a shared CI runner);
+    compile counts come from the first, cold run (later runs hit the
+    process-wide jit cache by design)."""
+    from benchmarks import decode_microbench, kvcache_bench
+    probe = machine_probe_mflops()
+    decs = [decode_microbench.run(verbose=verbose and i == 0,
+                                  sizes=(1 << 16,))[0]
+            for i in range(repeats)]
+    mixeds = [kvcache_bench.run_mixed(verbose=verbose and i == 0)
+              for i in range(repeats)]
+    dec = {k: max(d[k] for d in decs) for k in ("tpu_jnp_MBps", "fr_MBps")}
+    over = kvcache_bench.run_oversubscribed(verbose=verbose)
+    return {
+        "schema": 1,
+        "probe_mflops": probe,
+        "serving": {
+            "chunked_tok_per_s": max(m["chunked"]["tok_per_s"]
+                                     for m in mixeds),
+            "chunked_ttft_mean_s": min(m["chunked"]["ttft_mean_s"]
+                                       for m in mixeds),
+            "chunked_ttft_short_mean_s":
+                min(m["chunked"]["ttft_short_mean_s"] for m in mixeds),
+            "chunked_prefill_compiles":
+                mixeds[0]["chunked"]["prefill_compiles"],
+            "whole_tok_per_s": max(m["whole"]["tok_per_s"]
+                                   for m in mixeds),
+            "whole_ttft_mean_s": min(m["whole"]["ttft_mean_s"]
+                                     for m in mixeds),
+            "whole_prefill_compiles":
+                mixeds[0]["whole"]["prefill_compiles"],
+        },
+        "oversubscribed": {
+            "swap_out_bytes": over["swap_out_bytes"],
+            "swap_in_bytes": over["swap_in_bytes"],
+            "n_preempted": over["n_preempted"],
+            "steps": over["steps"],
+        },
+        "decode": {
+            "tpu_jnp_MBps": dec["tpu_jnp_MBps"],
+            "fr_MBps": dec["fr_MBps"],
+        },
+    }
+
+
+def check(measured: dict, baseline: dict, tol: float = TOLERANCE) -> list:
+    """Regression gate -> list of failure strings (empty = pass)."""
+    fails = []
+    scale = measured["probe_mflops"] / max(baseline["probe_mflops"], 1e-9)
+    for (sec, key), kind in GATES.items():
+        try:
+            m, b = measured[sec][key], baseline[sec][key]
+        except KeyError:
+            fails.append(f"{sec}.{key}: missing from measurement/baseline")
+            continue
+        if kind in _TIMED:
+            # a regression must show both raw (same-class runner) and
+            # probe-normalized (a runner half the baseline machine's
+            # speed is expected to hit half the tokens/s and twice the
+            # TTFT) — requiring both keeps probe noise from failing a
+            # healthy run while a real 30% code regression fails both
+            norm = (m / max(scale, 1e-9) if kind == "higher"
+                    else m * scale)
+            if kind == "higher":
+                bad = (m < (1 - tol) * b) and (norm < (1 - tol) * b)
+            else:
+                bad = (m > (1 + tol) * b) and (norm > (1 + tol) * b)
+            if bad:
+                fails.append(
+                    f"{sec}.{key}: {m:.4g} (probe-normalized {norm:.4g}) "
+                    f"vs baseline {b:.4g} — >{tol:.0%} regression")
+        elif kind == "count":
+            if m > b:
+                fails.append(f"{sec}.{key}: {m} > baseline {b}")
+        else:  # band
+            if not (1 - tol) * b <= m <= (1 + tol) * b:
+                fails.append(f"{sec}.{key}: {m} outside +-{tol:.0%} of "
+                             f"baseline {b}")
+    return fails
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--check", default=None, metavar="BASELINE_JSON",
+                    help="compare against a committed baseline and exit "
+                         "non-zero on a >30%% regression")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    measured = collect(verbose=not args.quiet)
+    with open(args.out, "w") as f:
+        json.dump(measured, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[perf-smoke] wrote {args.out} "
+          f"(probe {measured['probe_mflops']:.0f} MFLOP/s, serving "
+          f"{measured['serving']['chunked_tok_per_s']:.1f} tok/s, TTFT "
+          f"{measured['serving']['chunked_ttft_mean_s'] * 1e3:.0f} ms)")
+
+    if args.check:
+        with open(args.check) as f:
+            baseline = json.load(f)
+        fails = check(measured, baseline)
+        if fails:
+            for msg in fails:
+                print(f"[perf-smoke] REGRESSION {msg}")
+            raise SystemExit(1)
+        print(f"[perf-smoke] no regression vs {args.check} "
+              f"(tolerance {TOLERANCE:.0%})")
+    return measured
+
+
+if __name__ == "__main__":
+    main()

@@ -94,6 +94,25 @@ def page_write(pool, page_table, cur_len, kv):
         kv[:, :, 0, :].astype(pool.dtype), mode="drop")
 
 
+def page_write_chunk(pool, row, positions, kv, n_valid):
+    """Scatter one prefill chunk's K (or V) into a single slot's pages.
+
+    pool: (n_pool, n_kv, ps, hd); row: (P,) int32 page ids (the slot's
+    page-table row); positions: (C,) absolute token positions of the
+    chunk; kv: (1, n_kv, C, hd); n_valid: scalar count of real (unpadded)
+    tokens.  Padded tokens are parked out of range and dropped
+    (``mode="drop"``), which is also how the sharded caller silences
+    non-owner shards (``decode_sharded.paged_prefill_chunk_sharded``)."""
+    ps = pool.shape[2]
+    P = row.shape[0]
+    C = positions.shape[0]
+    p_idx = jnp.clip(positions // ps, 0, P - 1)
+    off = positions % ps
+    pids = jnp.where(jnp.arange(C) < n_valid, row[p_idx], pool.shape[0])
+    return pool.at[pids, :, off, :].set(
+        kv[0].transpose(1, 0, 2).astype(pool.dtype), mode="drop")
+
+
 def cold_leaves(cache: dict, kn: str):
     """The compressed-pool leaves for ``kn`` in {'k','v'}, or None.
 
@@ -328,6 +347,14 @@ class PagedKVCache:
         """Pages to cover the prompt and the first decode write."""
         return min(prompt_len // self.page_size + 1, self.pages_per_slot)
 
+    def pages_for_prefix(self, n_tokens: int) -> int:
+        """Pages that hold the first ``n_tokens`` cache positions — the
+        chunked-prefill admission grant (unlike :func:`pages_needed` it
+        does not cover the first decode write; later chunks and the
+        decode step grow the slot page by page via :func:`ensure`)."""
+        return min(max(-(-n_tokens // self.page_size), 1),
+                   self.pages_per_slot)
+
     def can_admit(self, prompt_len: int, slot: int | None = None) -> bool:
         """Whether ``slot``'s shard (any shard when ``slot`` is None) has
         enough free pages for a ``prompt_len``-token prompt."""
@@ -379,6 +406,31 @@ class PagedKVCache:
                         full, fr.astype(full.dtype), slot, axis=axis),
                     dst, src)
             cache[section] = {**cache[section], name: new}
+        return cache
+
+    def admit_slot(self, cache: dict, slot: int, need: int):
+        """Allocate a fresh slot for **chunked prefill**: grant ``need``
+        pages (no fragment is spliced — chunks write K/V in-graph via
+        :func:`page_write_chunk`) and reset the slot's timeline to
+        position 0.  The grant is the first chunk's pages
+        (:func:`pages_for_prefix`) when preemption can resolve later
+        pressure, or the whole-prompt :func:`pages_needed` reservation
+        when it cannot; later chunks append pages across chunk
+        boundaries with :func:`ensure`."""
+        sh = self.shard_of_slot(slot)
+        free = self._free[sh]
+        if len(free) < need:
+            raise OutOfPages(f"shard {sh}: slot {slot} needs {need} pages, "
+                             f"{len(free)} free")
+        pids = [free.pop() for _ in range(need)]
+        self._slot_pages[slot] = pids
+        self._skip[slot] = set()
+        row = np.zeros(self.pages_per_slot, np.int32)
+        row[:need] = pids
+        cache = dict(cache)
+        cache["page_table"] = cache["page_table"].at[slot].set(
+            jnp.asarray(row))
+        cache["cur_len"] = cache["cur_len"].at[slot].set(0)
         return cache
 
     def _frag_pages(self, x, stacked: bool):

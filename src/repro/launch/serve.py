@@ -82,6 +82,18 @@ def main(argv=None):
                          "out a victim, requeue, resume later).  Requires "
                          "--swap-bytes; --no-preemption restores the "
                          "seed's stall-and-raise admission.")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked, decode-interleaved prefill: split each "
+                         "prompt into fixed N-token chunks (one prefill "
+                         "compilation for every prompt length) and "
+                         "interleave them with decode steps.  0 = "
+                         "whole-prompt prefill (one compile per prompt "
+                         "length).  Needs --cache paged/paged-compressed "
+                         "and an all-attention architecture.")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="prompt tokens spent on prefill per engine step "
+                         "(bounds decode latency under long prompts); "
+                         "default: one chunk.")
     ap.add_argument("--mesh", default=None, metavar="D[xM]",
                     help="serve on a (data=D[, model=M]) device mesh, e.g. "
                          "'2' or '2x2'.  Needs D*M visible devices (on CPU "
@@ -145,6 +157,8 @@ def main(argv=None):
         compress_cold=args.cache == "paged-compressed",
         swap_bytes=args.swap_bytes,
         preemption=args.preemption,
+        prefill_chunk=args.prefill_chunk,
+        prefill_budget=args.prefill_budget or None,
     )
     mon = KVCacheMonitor()
     eng = GenerationEngine(params_c, cfg, max_batch=args.max_batch,
@@ -176,6 +190,13 @@ def main(argv=None):
                           for k in range(eng.paged.n_shards)]
             print(f"[serve] pages-per-shard peak {peak_shard} "
                   f"(free now {eng.paged.free_pages_per_shard})")
+        if eng.prefill_chunk:
+            print(f"[serve] chunked prefill (chunk={eng.prefill_chunk}, "
+                  f"budget={eng.prefill_budget}/step): {eng.n_chunks} "
+                  f"chunks / {eng.n_chunk_tokens} prompt tokens, "
+                  f"{eng.n_interleaved_steps} interleaved steps, "
+                  f"{eng.prefill_compile_count()} prefill compilation(s) "
+                  f"across all prompt lengths")
         if "peak_swap_bytes" in s:
             print(f"[serve] swap tier: peak host-resident "
                   f"{s['peak_swap_bytes'] / 1e6:.3f}MB, traffic out/in "

@@ -190,6 +190,109 @@ def paged_shardable(cache: dict, page_table, cur_len, mesh) -> bool:
     return True
 
 
+def chunk_shardable(cache: dict, mesh) -> bool:
+    """Whether a chunk-prefill call on this paged leaf-dict should take
+    :func:`paged_prefill_chunk_sharded` — a mesh with batch axes of size
+    > 1 and pool/cold dims divisible by that size (the
+    ``PagedKVCache(n_shards=...)`` layout).  A model-axis-only mesh
+    returns False; the engine gates chunked prefill off there."""
+    if mesh is None:
+        return False
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_ba = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+    if n_ba == 1:
+        return False
+    if cache["k_pool"].shape[0] % n_ba:
+        return False
+    if "k_cpl" in cache and cache["k_cpl"].shape[0] % n_ba:
+        return False
+    return True
+
+
+def paged_prefill_chunk_sharded(q, new_k, new_v, cache, row, slot,
+                                positions, n_valid, mesh, *,
+                                n_slots: int, softcap: float = 0.0):
+    """Chunked prefill for one slot under a batch-axes mesh.
+
+    q/new_k/new_v: (1, H*, C, D) — one padded chunk; ``row``: (P,) the
+    slot's page-table row (global ids); ``slot``/``n_valid``: traced
+    scalars; ``positions``: (C,) absolute token positions; ``n_slots``:
+    the engine's static ``max_batch`` (slot ``s`` lives on batch shard
+    ``s // (n_slots / n_ba)``, the allocator's contiguous slot ranges).
+
+    The slot's pages all live on the batch shard that owns the slot
+    (per-shard id ranges), so the **owning shard runs the exact
+    single-device chunk program on its local pool** — write the chunk
+    K/V, gather the slot's history (local cold pages entropy-decoded),
+    attend causally from ``q_offset = positions[0]``.  Non-owner shards
+    park their writes out of range (dropped) and mask every key
+    (``kv_len = 0`` → a zero partial), and one ``psum`` over the batch
+    axes replicates the owner's output — bit-identical to the
+    single-device chunk, like the sharded decode path.
+
+    Returns (o (1, Hq, C, D), new_k_pool, new_v_pool)."""
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_ba = _axes_size(mesh, ba)
+    b_ax = ba if len(ba) != 1 else ba[0]
+
+    k_pool, v_pool = cache["k_pool"], cache["v_pool"]
+    cold_k = paged_kv.cold_leaves(cache, "k")
+    cold_v = paged_kv.cold_leaves(cache, "v")
+    has_cold = cold_k is not None
+    n_pool = k_pool.shape[0]
+    n_cold = cold_k[0].shape[0] if has_cold else 0
+    from .layers import blockwise_attention
+
+    def body(q_l, nk, nv, kp, vp, row_g, pos, slot_g, nv_g, *cold_flat):
+        d = jnp.int32(0)
+        for a in ba:
+            d = d * mesh.shape[a] + jax.lax.axis_index(a)
+        L_loc = kp.shape[0]                     # n_pool // n_ba
+        lo = d * L_loc
+        c_loc = n_cold // n_ba
+        cold_lo = d * c_loc
+        ck = cold_flat[:4] if has_cold else None
+        cv = cold_flat[4:] if has_cold else None
+        # contiguous slot ranges per batch shard (PagedKVCache layout):
+        # the owner holds every one of the slot's pages locally
+        owned = (slot_g // (n_slots // n_ba)) == d
+        is_cold = row_g >= n_pool
+        raw_loc = row_g - lo
+        loc = jnp.where(is_cold, L_loc + (row_g - n_pool - cold_lo),
+                        raw_loc)
+        wrow = jnp.where((row_g >= lo) & (row_g < lo + L_loc), raw_loc,
+                         L_loc)
+        nv_l = jnp.where(owned, nv_g, 0)        # park non-owner writes
+        kp = paged_kv.page_write_chunk(kp, wrow, pos, nk, nv_l)
+        vp = paged_kv.page_write_chunk(vp, wrow, pos, nv, nv_l)
+        gtbl = jnp.clip(loc, 0, L_loc + c_loc - 1)
+        k_hist = paged_kv.page_gather(kp, gtbl[None], cpool=ck)
+        v_hist = paged_kv.page_gather(vp, gtbl[None], cpool=cv)
+        o = blockwise_attention(
+            q_l, k_hist, v_hist, causal=True, q_offset=pos[0],
+            kv_len=jnp.where(owned, pos[0] + nv_g, 0),
+            attn_softcap=softcap)
+        o = jax.lax.psum(jnp.where(owned, o, jnp.zeros_like(o)), ba)
+        return o, kp, vp
+
+    pool_spec = P(b_ax, None, None, None)
+    cold_specs = tuple(P(b_ax, *(None,) * (x.ndim - 1))
+                       for x in ((*cold_k, *cold_v) if has_cold else ()))
+    rep = P(None, None, None, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(rep, rep, rep,                 # q, new k, new v
+                  pool_spec, pool_spec,          # k/v pool
+                  P(None),                       # page-table row
+                  P(None),                       # positions
+                  P(), P(),                      # slot, n_valid
+                  *cold_specs),
+        out_specs=(rep, pool_spec, pool_spec),
+        check_rep=False,
+    )(q, new_k, new_v, k_pool, v_pool, row, positions, slot, n_valid,
+      *((*cold_k, *cold_v) if has_cold else ()))
+
+
 def paged_decode_attention_sharded(q, new_k, new_v, cache, page_table,
                                    cur_len, mesh, *, softcap: float = 0.0):
     """Sharded paged decode: page write + gather + attention, one shard_map.

@@ -274,6 +274,67 @@ def _self_attention_decode(p, x, cfg: ArchConfig, kind: str, dtype, cache,
     return _attn_out(p, o, dtype), new_cache
 
 
+def _self_attention_chunk(p, x, cfg: ArchConfig, kind: str, dtype, cache,
+                          page_table, slot, start, n_valid, mesh=None):
+    """One prefill **chunk** for a single slot of the paged cache.
+
+    x: (1, C, d) — a fixed-size padded chunk of the slot's prompt;
+    ``slot``/``start``/``n_valid`` are traced scalars (one compilation
+    serves every prompt length and chunk position).  The chunk's K/V is
+    scattered into the slot's pages (``page_write_chunk``), the slot's
+    whole history (previous chunks included, cold pages entropy-decoded)
+    is gathered back, and the chunk attends causally over it with
+    ``q_offset=start`` — resuming prefill from the existing cache prefix.
+    Only paged kinds are supported; the engine gates chunked prefill to
+    architectures where every layer pages ('attn'/'nope')."""
+    C = x.shape[1]
+    positions = start + jnp.arange(C)
+    q, k, v = _qkv(p, x, cfg, dtype, rope=(kind != "nope"),
+                   positions=positions)
+    row = jnp.maximum(page_table[slot], paged_kv.GARBAGE_PAGE)
+    from .decode_sharded import chunk_shardable, paged_prefill_chunk_sharded
+    if chunk_shardable(cache, mesh):
+        o, k_pool, v_pool = paged_prefill_chunk_sharded(
+            q, k, v, cache, row, slot, positions, n_valid, mesh,
+            n_slots=page_table.shape[0], softcap=cfg.attn_softcap)
+    else:
+        k_pool = paged_kv.page_write_chunk(cache["k_pool"], row, positions,
+                                           k, n_valid)
+        v_pool = paged_kv.page_write_chunk(cache["v_pool"], row, positions,
+                                           v, n_valid)
+        k_hist = paged_kv.page_gather(k_pool, row[None],
+                                      cpool=paged_kv.cold_leaves(cache, "k"))
+        v_hist = paged_kv.page_gather(v_pool, row[None],
+                                      cpool=paged_kv.cold_leaves(cache, "v"))
+        o = blockwise_attention(q, k_hist, v_hist, causal=True,
+                                q_offset=start, kv_len=start + n_valid,
+                                attn_softcap=cfg.attn_softcap)
+    new_cache = {**cache, "k_pool": k_pool, "v_pool": v_pool}
+    return _attn_out(p, o, dtype), new_cache
+
+
+def _layer_apply_chunk(p, x, cfg: ArchConfig, kind: str, dtype, mesh, cache,
+                       page_table, slot, start, n_valid):
+    """Chunk-mode layer: decode-layer residual structure at T=C."""
+    if kind not in ATTN_KINDS or kind == "local":
+        raise ValueError(
+            f"chunked prefill only pages 'attn'/'nope' layers, got {kind}")
+    h = rms_norm(x, p["norm1"])
+    o, cache = _self_attention_chunk(p["attn"], h, cfg, kind, dtype, cache,
+                                     page_table, slot, start, n_valid,
+                                     mesh=mesh)
+    if cfg.post_norms:
+        o = rms_norm(o, p["post_norm1"])
+    x = x + o
+    if "mlp" in p or "moe" in p:
+        h2 = rms_norm(x, p["norm2"])
+        o2, _ = _ffn(p, h2, cfg, dtype, mesh)
+        if cfg.post_norms:
+            o2 = rms_norm(o2, p["post_norm2"])
+        x = x + o2
+    return x, cache
+
+
 def _ffn(p, x, cfg: ArchConfig, dtype, mesh):
     if "moe" in p:
         y, aux = moe_apply(p["moe"], x, cfg, mesh=mesh, dtype=dtype)
@@ -637,6 +698,60 @@ def prefill(params, cfg: ArchConfig, tokens, frames=None, mesh=None,
                 lambda x: x[0], _make_cross_kv(params, cfg, cross_ctx, dtype))
     return logits, {"units": new_units, "tail": new_tail,
                     "cur_len": jnp.full((), T, jnp.int32)}
+
+
+def prefill_chunk(params, cfg: ArchConfig, tokens, cache, slot, n_valid,
+                  mesh=None):
+    """Process one fixed-size prompt chunk for ``slot`` of a paged cache.
+
+    tokens: (1, C) int32 — a chunk of the prompt padded to the engine's
+    chunk size; ``slot`` and ``n_valid`` (the count of real tokens) are
+    traced scalars, and the chunk's start position is read from
+    ``cache["cur_len"][slot]`` — so **one compilation serves every prompt
+    length, chunk index and slot** (the whole-prompt ``prefill`` retraces
+    per prompt length).  K/V is appended straight into the slot's pages
+    across chunk boundaries; the final chunk's last-position logits are
+    where the request's first token is sampled from.
+
+    Returns (logits (1, 1, V) at position ``n_valid - 1`` of the chunk,
+    new cache with ``cur_len[slot] += n_valid``).  Requires a paged cache
+    and an architecture whose every layer is a paged kind ('attn'/'nope');
+    the serving engine falls back to whole-prompt prefill otherwise."""
+    dtype = jnp.dtype(cfg.dtype)
+    cur_len = cache["cur_len"]
+    start = cur_len[slot]
+    page_table = cache["page_table"]
+    x = _embed(params, cfg, tokens, dtype)
+
+    unit = cfg.unit
+    n_units = cfg.n_layers // unit
+
+    def unit_body(x, xs):
+        unit_p, unit_c = xs
+        new_c = {}
+        for j in range(unit):
+            x, c = _layer_apply_chunk(unit_p[f"pos{j}"], x, cfg,
+                                      cfg.pattern[j], dtype, mesh,
+                                      unit_c[f"pos{j}"], page_table, slot,
+                                      start, n_valid)
+            new_c[f"pos{j}"] = c
+        return x, new_c
+
+    x, new_units = jax.lax.scan(unit_body, x,
+                                (params["units"], cache["units"]))
+    new_tail = {}
+    for t, (name, p) in enumerate(sorted(params["tail"].items())):
+        kind = cfg.layer_kind(n_units * unit + t)
+        x, c = _layer_apply_chunk(p, x, cfg, kind, dtype, mesh,
+                                  cache["tail"][name], page_table, slot,
+                                  start, n_valid)
+        new_tail[name] = c
+    last = jax.lax.dynamic_slice_in_dim(
+        x, jnp.maximum(n_valid - 1, 0), 1, axis=1)
+    logits = _unembed(params, cfg, last, dtype)
+    return logits, {"units": new_units, "tail": new_tail,
+                    "cur_len": cur_len.at[slot].set(start + n_valid),
+                    "page_table": page_table}
 
 
 def _make_cross_kv(params, cfg, cross_ctx, dtype):

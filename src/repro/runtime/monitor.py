@@ -138,4 +138,12 @@ class KVCacheMonitor:
                 "n_preempted": last.get("n_preempted", 0),
                 "n_resumed": last.get("n_resumed", 0),
             })
+        if "n_prefill_chunks" in last:    # chunked prefill active
+            out.update({
+                "n_prefill_chunks": last["n_prefill_chunks"],
+                "prefill_chunk_tokens": last["prefill_chunk_tokens"],
+                "n_interleaved_steps": last["n_interleaved_steps"],
+                "peak_prefilling_slots": max(s.get("prefilling_slots", 0)
+                                             for s in self.samples),
+            })
         return out

@@ -35,6 +35,29 @@ folded from ``(rng_seed, request.id, position)`` only.  The engine
 faults every active slot fully resident before each decode step
 (fault-before-gather), so the jitted graph never sees a swapped page.
 
+With **chunked prefill** (``prefill_chunk=C``) the compute side of
+admission is rebuilt around continuous batching: each admitted prompt is
+split into fixed-size ``C``-token chunks (padded, so every chunk call
+has one static shape — **exactly one prefill compilation per (cfg,
+mesh, max_len, C)** regardless of prompt length, where the whole-prompt
+path retraces per length), chunk K/V is appended straight into the
+slot's pages across chunk boundaries (``models.model.prefill_chunk``),
+and prefill chunks interleave with decode steps under a per-step
+**prefill token budget** (``prefill_budget``, default ``C``): every
+engine step spends at most ~budget prompt tokens on prefill — draining
+mid-prefill slots first (FIFO within priority), then admitting new
+work — before running one batched decode step for the decode-phase
+slots, so a long prompt can no longer stall every decoding request
+behind a monolithic prefill (Sarathi/vLLM-style scheduling).  A slot
+mid-prefill participates in the batched decode step as a masked row
+(its garbage write lands at the next chunk's first position and is
+overwritten; its timeline is rolled back after the step) and can be
+preempted like any other slot — ``Preempted.prefill_pos`` records the
+resume point, and the continuation is bit-identical to an unchunked
+run.  Chunked prefill requires the paged cache and an architecture
+whose every layer pages ('attn'/'nope'); other configs fall back to
+whole-prompt prefill.
+
 Under a JAX **mesh** the paged cache stays paged: the page pool, cold
 pool, page table and per-slot timelines shard over the mesh's batch axes
 (``runtime.sharding.batch_axes``), the allocator keeps one free list per
@@ -60,11 +83,11 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.kvcache import OutOfPages, PagedKVCache, SwapStore
-from repro.kvcache.paged import restore_cold, strip_cold
+from repro.kvcache.paged import PAGED_KINDS, restore_cold, strip_cold
 from repro.kvcache.swap import SwapExhausted
 from repro.models import model as M
 from repro.runtime import sharding as SH
-from .sampler import greedy, sample_logits
+from .sampler import greedy, request_key, sample_logits
 from .scheduler import Preempted, Scheduler
 
 _ids = itertools.count()
@@ -85,6 +108,10 @@ class Request:
 # cheap, throwaway objects (tests build hundreds); sharing the jit cache
 # across instances avoids recompiling identical programs
 _STEP_CACHE: dict = {}
+# one jitted chunk-prefill per (cfg, mesh, max_len, chunk): slot, start
+# and n_valid are traced, so this single entry serves every prompt
+# length — the whole point of the fixed chunk shape
+_CHUNK_CACHE: dict = {}
 
 
 def _jitted_steps(cfg: ArchConfig, mesh, max_len: int):
@@ -95,6 +122,26 @@ def _jitted_steps(cfg: ArchConfig, mesh, max_len: int):
             jax.jit(lambda p, t: M.prefill(p, cfg, t, mesh=mesh,
                                            max_len=max_len)))
     return _STEP_CACHE[key]
+
+
+def _jitted_chunk(cfg: ArchConfig, mesh, max_len: int, chunk: int):
+    key = (cfg, mesh, max_len, chunk)
+    if key not in _CHUNK_CACHE:
+        _CHUNK_CACHE[key] = jax.jit(
+            lambda p, t, c, s, n: M.prefill_chunk(p, cfg, t, c, s, n,
+                                                  mesh=mesh))
+    return _CHUNK_CACHE[key]
+
+
+def compile_count(fn) -> int:
+    """Traced-program count of a jitted step (-1 when the runtime does
+    not expose it).  The perf-smoke tier and the recompile regression
+    test read this off ``engine._jitted_steps``/``_jitted_chunk`` entries
+    to pin "exactly one prefill compilation per chunk shape"."""
+    try:
+        return int(fn._cache_size())
+    except AttributeError:
+        return -1
 
 
 def _splice(full, frag, slot: int, path_names):
@@ -135,7 +182,8 @@ class GenerationEngine:
                  cache_mode: str = "paged", page_size: int = 16,
                  n_pages: int | None = None, compress_cold: bool = False,
                  n_cold_slots: int | None = None, kv_monitor=None,
-                 swap_bytes: int | None = None, preemption: bool = True):
+                 swap_bytes: int | None = None, preemption: bool = True,
+                 prefill_chunk: int = 0, prefill_budget: int | None = None):
         """``mesh``: optional ``jax.sharding.Mesh``; the paged cache shards
         over its batch axes (see module docstring) and decode/prefill steps
         are jitted against it.  ``cache_mode``/``page_size``/``n_pages``/
@@ -148,7 +196,14 @@ class GenerationEngine:
         disables swapping (and with it preemption).  ``preemption``
         gates whole-request preemption on top of an enabled swap tier —
         with it off, the swap tier is never used (there is no other
-        eviction source) and admission behaves like the seed engine."""
+        eviction source) and admission behaves like the seed engine.
+
+        ``prefill_chunk`` > 0 enables chunked, decode-interleaved
+        prefill (see module docstring); ``prefill_budget`` caps the
+        prompt tokens spent on prefill per engine step (default: one
+        chunk).  Chunked prefill needs the paged cache, an architecture
+        whose every layer pages, and a mesh without a model axis —
+        otherwise the engine warns and prefills whole prompts."""
         self.params, self.cfg = params, cfg
         self.max_batch, self.max_len = max_batch, max_len
         self.mesh = mesh
@@ -195,13 +250,39 @@ class GenerationEngine:
             self.cache = M.init_cache(cfg, max_batch, max_len,
                                       dtype=jnp.dtype(cfg.dtype),
                                       per_slot=True)
-        self.scheduler = Scheduler(paged=self.paged, preemption=preemption)
+        # chunked prefill: gate to configs the chunk path supports, then
+        # clamp the chunk/budget to the window
+        chunk = min(max(prefill_chunk, 0), max_len)
+        if chunk:
+            n_model = 1
+            if mesh is not None and "model" in mesh.axis_names:
+                n_model = mesh.shape["model"]
+            all_paged = all(cfg.layer_kind(i) in PAGED_KINDS
+                            for i in range(cfg.n_layers))
+            if (self.cache_mode != "paged" or not all_paged
+                    or cfg.encoder_decoder or n_model > 1):
+                warnings.warn(
+                    f"prefill_chunk={prefill_chunk} needs the paged cache, "
+                    f"an all-'attn'/'nope' layer stack and no model mesh "
+                    f"axis; falling back to whole-prompt prefill",
+                    stacklevel=2)
+                chunk = 0
+        self.prefill_chunk = chunk
+        self.prefill_budget = max(prefill_budget or chunk, 1) if chunk else 0
+        self._prefill_pos: dict[int, int] = {}  # slot -> prompt tokens done
+        self._prefill_order: list[int] = []     # admission order (FIFO)
+        self._stalled_ids: set = set()          # self-preempted this step
+        self.n_chunks = self.n_chunk_tokens = self.n_interleaved_steps = 0
+        self.scheduler = Scheduler(paged=self.paged, preemption=preemption,
+                                   chunk_tokens=chunk)
         self._host_len = [0] * max_batch        # next write position per slot
         # sampling keys fold (rng_seed, request.id, position) — the token
         # stream of a sampled request is a pure function of its own state,
         # independent of batching, scheduling and preemption
         self.rng0 = jax.random.PRNGKey(rng_seed)
         self._decode, self._prefill = _jitted_steps(cfg, mesh, max_len)
+        self._chunk = (_jitted_chunk(cfg, mesh, max_len, chunk)
+                       if chunk else None)
         self.last_tok = jnp.zeros((max_batch, 1), jnp.int32)
         self.steps = 0
 
@@ -226,11 +307,26 @@ class GenerationEngine:
         self.last_tok = self.last_tok.at[slot, 0].set(tok)
         self.slots[slot] = req
 
+    def _start_chunked(self, slot: int, req: Request):
+        """Admit a request for chunked prefill: allocate its page grant
+        (``Scheduler.admission_grant`` — the same count ``pick`` tested
+        against) and enter the prefill phase; no prompt compute yet,
+        chunks run under the step's token budget in
+        :func:`_prefill_phase`."""
+        self.cache = self.paged.admit_slot(
+            self.cache, slot, self.scheduler.admission_grant(req))
+        self._host_len[slot] = 0
+        self._prefill_pos[slot] = 0
+        self._prefill_order.append(slot)
+        self.slots[slot] = req
+
     def _resume(self, slot: int, st: Preempted):
         """Re-splice a preempted request: reinstall its page list, fault
         every page back (lossless restore), reinstall any non-paged
         per-slot state (hybrid archs) and rebuild the slot timeline —
-        the continuation is bit-identical to an unpreempted run."""
+        the continuation is bit-identical to an unpreempted run.  A
+        mid-prefill record re-enters the prefill phase at
+        ``st.prefill_pos`` instead of rejoining the decode batch."""
         self.cache = self.paged.attach_slot(self.cache, slot, st.pages,
                                             st.skip)
         self.cache = self.paged.fault(self.cache, slot)
@@ -241,7 +337,11 @@ class GenerationEngine:
         self.cache["cur_len"] = self.cache["cur_len"].at[slot].set(
             st.host_len)
         self._host_len[slot] = st.host_len
-        self.last_tok = self.last_tok.at[slot, 0].set(st.last_tok)
+        if st.prefill_pos is not None:
+            self._prefill_pos[slot] = st.prefill_pos
+            self._prefill_order.append(slot)
+        else:
+            self.last_tok = self.last_tok.at[slot, 0].set(st.last_tok)
         self.slots[slot] = st.req
         self.scheduler.n_resumed += 1
 
@@ -268,26 +368,36 @@ class GenerationEngine:
         pages, skip = self.paged.detach_slot(slot)
         st = Preempted(req=req, pages=pages, skip=skip, state=state,
                        host_len=self._host_len[slot],
-                       last_tok=int(self.last_tok[slot, 0]))
+                       last_tok=int(self.last_tok[slot, 0]),
+                       prefill_pos=self._prefill_pos.get(slot))
+        if slot in self._prefill_pos:       # preempted mid-prefill
+            del self._prefill_pos[slot]
+            self._prefill_order.remove(slot)
         self.slots[slot] = None
         self.scheduler.n_preempted += 1
         self.scheduler.requeue(st)
         return True
 
-    def _admit(self):
+    def _admit(self, prefill_budget: int | None = None):
         """Fill free slots from the scheduler; preempt strictly-lower-
-        priority work when the head of the queue is blocked on pages."""
+        priority work when the head of the queue is blocked on pages.
+        ``prefill_budget``: remaining chunked-prefill tokens this step —
+        once spent, only zero-prefill items (decode-phase resumes) admit,
+        and the admission-victim hunt stands down (preempting for a
+        request we cannot prefill yet would only flap)."""
         sched = self.scheduler
         while True:
             progress = False
             for slot in range(self.max_batch):
                 if self.slots[slot] is not None:
                     continue
-                item = sched.pick(slot)
+                item = sched.pick(slot, prefill_budget)
                 if item is None:
                     continue
                 if isinstance(item, Preempted):
                     self._resume(slot, item)
+                elif self.prefill_chunk:
+                    self._start_chunked(slot, item)
                 else:
                     self._start(slot, item)
                 progress = True
@@ -296,10 +406,14 @@ class GenerationEngine:
             head = sched.head()
             if head is None:
                 break
+            if (prefill_budget is not None and prefill_budget <= 0
+                    and sched.prefill_tokens(head) > 0):
+                break
             victim = sched.admission_victim(self.slots, head)
             if victim is None or not self._preempt(victim):
                 break
         if (sched.waiting and self.paged is not None
+                and not (prefill_budget is not None and prefill_budget <= 0)
                 and not any(s is not None for s in self.slots)):
             # every slot is free yet nothing could be admitted: no release
             # will ever refill the free lists.  Raised only once the
@@ -319,9 +433,106 @@ class GenerationEngine:
     def _sample_one(self, logits, req: Request):
         if req.temperature <= 0:
             return greedy(logits)[0, 0]
-        key = jax.random.fold_in(jax.random.fold_in(self.rng0, req.id),
-                                 len(req.out_tokens))
+        key = request_key(self.rng0, req.id, len(req.out_tokens))
         return sample_logits(logits, key, temperature=req.temperature)[0, 0]
+
+    # -- chunked prefill ---------------------------------------------------
+
+    def _maybe_strip(self):
+        """(cache for the jitted call, stash) — while nothing is cold,
+        both the decode step and the chunk step trace their no-cold-pool
+        variant (the in-graph entropy decode of an empty pool is waste)."""
+        if (self.paged is not None and self.paged.compress
+                and not self.paged.has_cold):
+            return strip_cold(self.cache)
+        return self.cache, None
+
+    def _ensure_prefill(self, slot: int, pos: int) -> bool:
+        """Grow ``slot``'s page list to cover a chunk write at ``pos``.
+        On pressure, preempt same-shard victims; as a last resort the
+        prefilling request preempts *itself* (its chunks so far swap out
+        losslessly and resume at the recorded position) — at most once
+        per step, after which it pauses holding its pages, so an
+        evict/fault ping-pong can never spin inside one step.  Returns
+        False when the chunk must not run (self-preempted or paused)."""
+        req = self.slots[slot]
+        while True:
+            try:
+                self.cache = self.paged.ensure(self.cache, slot, pos)
+                return True
+            except OutOfPages:
+                victim = self.scheduler.victim(
+                    self.slots, shard=self.paged.shard_of_slot(slot),
+                    exclude=(slot,))
+                if victim is not None and self._preempt(victim):
+                    continue
+                if (self.scheduler._can_preempt()
+                        and req.id not in self._stalled_ids
+                        and self._preempt(slot)):
+                    self._stalled_ids.add(req.id)
+                    return False
+                if self.scheduler._can_preempt():
+                    return False        # paused: retry next step
+                raise
+
+    def _advance_prefill(self, slot: int, allowance: int) -> int:
+        """Run prefill chunks for ``slot`` until its prompt is done or
+        ~``allowance`` tokens were spent (the last chunk may overshoot by
+        at most ``chunk - 1``).  The final chunk's logits produce the
+        request's first token and move the slot to the decode phase.
+        Returns the tokens spent."""
+        req = self.slots[slot]
+        C = self.prefill_chunk
+        spent = 0
+        while (self.slots[slot] is req and slot in self._prefill_pos
+               and spent < allowance):
+            pos = self._prefill_pos[slot]
+            part = req.prompt[pos:pos + C]
+            n = len(part)
+            if not self._ensure_prefill(slot, pos + n - 1):
+                return spent                    # self-preempted: requeued
+            toks = jnp.asarray(list(part) + [0] * (C - n),
+                               jnp.int32)[None, :]
+            cache_in, stash = self._maybe_strip()
+            logits, new_cache = self._chunk(self.params, toks, cache_in,
+                                            slot, n)
+            self.cache = (restore_cold(new_cache, stash) if stash
+                          else new_cache)
+            self._prefill_pos[slot] = pos + n
+            self._host_len[slot] = pos + n
+            self.n_chunks += 1
+            self.n_chunk_tokens += n
+            spent += n
+            if pos + n >= len(req.prompt):      # final chunk: first token
+                tok = self._sample_one(logits, req)
+                req.out_tokens.append(int(tok))
+                self.last_tok = self.last_tok.at[slot, 0].set(tok)
+                del self._prefill_pos[slot]
+                self._prefill_order.remove(slot)
+        return spent
+
+    def _prefill_phase(self) -> int:
+        """Spend up to ``prefill_budget`` prompt tokens on prefill work:
+        mid-prefill slots drain first in admission order (FIFO within
+        priority — an earlier prompt finishes before a later one starts),
+        then new work admits against the remaining budget and runs its
+        first chunks in the same step.  Returns tokens spent."""
+        budget = self.prefill_budget
+        spent = 0
+        self._stalled_ids.clear()
+        while True:
+            for slot in list(self._prefill_order):
+                if spent >= budget:
+                    break
+                if self.slots[slot] is not None and slot in self._prefill_pos:
+                    spent += self._advance_prefill(slot, budget - spent)
+            before = len(self._prefill_order)
+            had_free = any(s is None for s in self.slots)
+            self._admit(prefill_budget=budget - spent)
+            if len(self._prefill_order) == before or spent >= budget \
+                    or not had_free:
+                break
+        return spent
 
     # -- stepping ----------------------------------------------------------
 
@@ -341,18 +552,29 @@ class GenerationEngine:
                     raise
 
     def step(self) -> bool:
-        """Admit + one batched decode step.  Returns False when idle."""
-        self._admit()
+        """One engine step: budgeted prefill work (chunked mode), then
+        one batched decode step for the decode-phase slots.  Returns
+        False when idle."""
+        if self.prefill_chunk:
+            prefill_spent = self._prefill_phase()
+        else:
+            self._admit()
+            prefill_spent = 0
         active = [s for s in range(self.max_batch)
-                  if self.slots[s] is not None]
+                  if self.slots[s] is not None
+                  and s not in self._prefill_pos]
         if not active:
+            if self._prefill_pos:
+                self._record_monitor()
+                return True         # prefill in flight, nothing to decode
             return self.scheduler.waiting > 0
         if self.paged is not None:
             for s in active:   # grow page lists to cover this step's write
-                if self.slots[s] is not None:   # may be preempted below
+                if self.slots[s] is not None and s not in self._prefill_pos:
                     self._ensure_with_pressure(s)
             active = [s for s in range(self.max_batch)
-                      if self.slots[s] is not None]
+                      if self.slots[s] is not None
+                      and s not in self._prefill_pos]
             # fault-before-gather: the decode step must never see a
             # swapped page of an active slot (normally a no-op; resume
             # already faults, and whole-request preemption only swaps
@@ -362,16 +584,22 @@ class GenerationEngine:
                     self.cache = self.paged.fault(self.cache, s)
         # while nothing is cold, run the decode variant without the cold
         # pool (its in-graph entropy decode would be pure waste)
-        stash = None
-        cache_in = self.cache
-        if (self.paged is not None and self.paged.compress
-                and not self.paged.has_cold):
-            cache_in, stash = strip_cold(self.cache)
+        cache_in, stash = self._maybe_strip()
         logits, new_cache = self._decode(self.params, self.last_tok,
                                          cache_in)
         self.cache = (restore_cold(new_cache, stash) if stash
                       else new_cache)
         self.steps += 1
+        if self._prefill_pos:
+            # mid-prefill rows decoded as masked garbage: the batched
+            # step advanced every timeline, so roll theirs back (their
+            # stray write sits at the next chunk's first position and is
+            # overwritten by it)
+            idx = jnp.asarray(sorted(self._prefill_pos), jnp.int32)
+            self.cache = dict(self.cache)
+            self.cache["cur_len"] = self.cache["cur_len"].at[idx].add(-1)
+        if prefill_spent:
+            self.n_interleaved_steps += 1
         toks = np.asarray(greedy(logits))  # (B, 1)
         # one batched draw for every sampled row: per-row keys fold
         # (rng_seed, request.id, position) — identical values to calling
@@ -387,8 +615,7 @@ class GenerationEngine:
                                 jnp.float32)
 
             def draw(row, i, p, t):
-                key = jax.random.fold_in(jax.random.fold_in(self.rng0, i),
-                                         p)
+                key = request_key(self.rng0, i, p)
                 return sample_logits(row[None] / t, key,
                                      temperature=1.0)[0, 0]
 
@@ -411,11 +638,30 @@ class GenerationEngine:
                 if self.slots[s] is not None:
                     self.cache = self.paged.compress_cold_pages(
                         self.cache, s, self._host_len[s])
-        if self.kv_monitor is not None and self.paged is not None:
-            stats = self.paged.stats()
-            stats.update(self.scheduler.counters())
-            self.kv_monitor.record(stats)
+        self._record_monitor()
         return True
+
+    def _record_monitor(self):
+        if self.kv_monitor is None or self.paged is None:
+            return
+        stats = self.paged.stats()
+        stats.update(self.scheduler.counters())
+        if self.prefill_chunk:
+            stats.update({
+                "n_prefill_chunks": self.n_chunks,
+                "prefill_chunk_tokens": self.n_chunk_tokens,
+                "n_interleaved_steps": self.n_interleaved_steps,
+                "prefilling_slots": len(self._prefill_pos),
+            })
+        self.kv_monitor.record(stats)
+
+    def prefill_compile_count(self) -> int:
+        """Traced-program count of this engine's prefill path: the chunk
+        step in chunked mode (must stay at 1 — or 2 once cold pages
+        appear and the no-cold variant retraces — across *every* prompt
+        length), else the whole-prompt prefill (retraces per length)."""
+        return compile_count(self._chunk if self.prefill_chunk
+                             else self._prefill)
 
     def run(self, max_steps: int = 10_000) -> list:
         """Drain the queue; returns every submitted request that finished

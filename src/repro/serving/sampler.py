@@ -18,6 +18,18 @@ def greedy(logits):
     return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
 
 
+def request_key(rng0, req_id, position):
+    """The serving engine's per-draw PRNG key: fold (request id, token
+    position) into the engine seed.  A request's sampled stream is a pure
+    function of its own state — independent of batching, scheduling,
+    preemption, and (with chunked prefill) of how many chunks its prompt
+    was split into: the **first** token always draws at position 0,
+    whether its logits came from a whole-prompt prefill or from the final
+    chunk.  Works under ``vmap`` (the engine draws one batched sample per
+    step) and eagerly (the per-request first-token draw)."""
+    return jax.random.fold_in(jax.random.fold_in(rng0, req_id), position)
+
+
 def filter_logits(x, *, top_k: int = 0, top_p: float = 0.0):
     """Mask logits ``x`` (B, V) float32 to the sampling support.
 

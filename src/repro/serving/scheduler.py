@@ -35,7 +35,13 @@ from dataclasses import dataclass, field
 
 @dataclass
 class Preempted:
-    """A swapped-out, partially-generated request awaiting resume."""
+    """A swapped-out request awaiting resume — either partially generated
+    (decode phase) or, with chunked prefill, partially **prefilled**:
+    ``prefill_pos`` is not None for a request preempted mid-prefill, and
+    names the number of prompt tokens whose K/V is already in the swapped
+    pages (always == ``host_len``; the next chunk resumes there).  A
+    mid-prefill record has no sampled token yet, so ``last_tok`` is a
+    placeholder that resume never feeds to a decode step."""
 
     req: object                 # serving.engine.Request
     pages: list                 # all-negative swap sentinels (detach_slot)
@@ -45,10 +51,18 @@ class Preempted:
     state: dict = field(default_factory=dict)
     # ^ non-paged per-slot cache state (local-attention rings, recurrent
     #   states of hybrid archs) — PagedKVCache.snapshot_slot_state
+    prefill_pos: int | None = None   # prompt tokens consumed (mid-prefill)
 
     @property
     def priority(self) -> int:
         return self.req.priority
+
+    @property
+    def prefill_tokens_left(self) -> int:
+        """Prompt tokens still to prefill on resume (0 in decode phase)."""
+        if self.prefill_pos is None:
+            return 0
+        return len(self.req.prompt) - self.prefill_pos
 
 
 @dataclass
@@ -59,6 +73,7 @@ class Scheduler:
 
     paged: object = None
     preemption: bool = True
+    chunk_tokens: int = 0      # engine's prefill chunk (0 = whole-prompt)
     _classes: dict = field(default_factory=dict)   # priority -> deque
     _clock: int = 0
     _last_used: dict = field(default_factory=dict)  # slot -> stamp
@@ -108,11 +123,36 @@ class Scheduler:
 
     # -- fit tests ---------------------------------------------------------
 
+    def prefill_tokens(self, item) -> int:
+        """Prompt tokens the item still needs prefilled once admitted —
+        the unit of the chunked engine's per-step token budget.  Zero for
+        a decode-phase resume (its prompt is already in its pages)."""
+        if isinstance(item, Preempted):
+            return item.prefill_tokens_left
+        return len(item.prompt)
+
+    def admission_grant(self, req) -> int:
+        """Pages a fresh request is granted at (chunked) admission — the
+        single source of truth for both the ``_fits`` test here and the
+        engine's ``admit_slot`` allocation, which must agree to the page.
+
+        With chunked prefill *and* a live preemption path, just the
+        first chunk's pages — later chunks grow the slot page by page,
+        and page pressure resolves by preempting a victim (or the
+        prefilling request itself).  Without preemption the whole-prompt
+        grant is required up front, exactly like the whole-prompt
+        engine: admitting on a first-chunk grant with no way to evict
+        could wedge a later chunk mid-flight."""
+        if self.chunk_tokens and self._can_preempt():
+            return self.paged.pages_for_prefix(
+                min(self.chunk_tokens, len(req.prompt)))
+        return self.paged.pages_needed(len(req.prompt))
+
     def _need_now(self, item) -> int:
         """Raw pages the item needs resident to start on a slot."""
         if isinstance(item, Preempted):
             return len(item.pages)      # conservative: cold slots may help
-        return self.paged.pages_needed(len(item.prompt))
+        return self.admission_grant(item)
 
     def _fits(self, item, shard: int) -> bool:
         """Admissible on ``shard`` *now and for its whole lifetime*: the
@@ -143,7 +183,7 @@ class Scheduler:
         return any(worst <= self.paged.shard_capacity(k)
                    for k in range(self.paged.n_shards))
 
-    def pick(self, slot: int):
+    def pick(self, slot: int, prefill_budget: int | None = None):
         """Pop the best waiting item admissible on ``slot`` now, or None.
 
         Strict head-of-line within a priority class: only the class's
@@ -152,7 +192,14 @@ class Scheduler:
         all-priority-0 workload reproduces the seed engine's FIFO
         admission order exactly and a large request cannot be starved by
         smaller ones behind it.  A blocked class head does let lower
-        classes run (utilization over strict priority while waiting)."""
+        classes run (utilization over strict priority while waiting).
+
+        ``prefill_budget`` is the chunked engine's remaining per-step
+        prefill token budget: once it is spent (``<= 0``), items that
+        still need prompt tokens prefilled are blocked for this step —
+        only decode-phase resumes (zero prefill work) admit.  A
+        budget-blocked class head blocks its class like a page-blocked
+        one, so FIFO within a class survives the token budget."""
         if self.paged is None:
             for p in self._priorities():
                 self.touch(slot)
@@ -165,6 +212,9 @@ class Scheduler:
                 if (not isinstance(item, Preempted)
                         and not self._ever_fits(item)):
                     continue        # unschedulable: not head-of-line
+                if (prefill_budget is not None and prefill_budget <= 0
+                        and self.prefill_tokens(item) > 0):
+                    break           # out of prefill budget this step
                 if self._fits(item, shard):
                     del q[i]
                     self.touch(slot)

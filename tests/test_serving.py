@@ -330,13 +330,14 @@ def test_page_boundary_prompt_swap_roundtrip_bit_identical():
         assert eng.scheduler.n_resumed >= 1
 
 
-def _check_differential_workload(wl, seed):
+def _check_differential_workload(wl, seed, prefill_chunk=0):
     """Differential core: a workload of (prompt_len, max_new, priority,
     temperature) tuples through the paged+compressed+swap engine emits
     per-request tokens bit-identical to the monolithic engine.  The tiny
     pool (5 pages, 1 cold slot) makes most workloads force eviction and
     preemption; sampling keys fold (seed, request.id, position) so even
-    sampled requests are schedule-invariant."""
+    sampled requests are schedule-invariant.  ``prefill_chunk`` > 0 runs
+    the chunked, decode-interleaved prefill path — same invariant."""
     cfg = smoke_variant(get("qwen3-8b"))
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(seed)
@@ -349,9 +350,12 @@ def _check_differential_workload(wl, seed):
                 for i, (_, n, pr, t) in enumerate(wl)]
 
     mono, _ = _serve(params, cfg, stream(), cache_mode="monolithic")
-    over, eng = _serve(params, cfg, stream(), **_OVERSUB)
+    over, eng = _serve(params, cfg, stream(), prefill_chunk=prefill_chunk,
+                       **_OVERSUB)
     assert over == mono
     assert len(eng.paged.swap) == 0              # swap fully drained
+    if prefill_chunk:
+        assert eng.prefill_chunk == prefill_chunk and eng.n_chunks > 0
     return eng
 
 
@@ -367,6 +371,105 @@ def test_differential_fixed_workloads_bit_identical():
         [(3, 8, 0, 0.8), (5, 6, 1, 0.0), (2, 5, 0, 0.8)], seed=7)
 
 
+# --------------------------------------------------------------------------
+# chunked, decode-interleaved prefill (ISSUE 4)
+# --------------------------------------------------------------------------
+
+
+def test_chunked_prefill_fixed_workloads_bit_identical():
+    """Tier-1 anchor: the chunked-prefill engine (chunk smaller than most
+    prompts, so multi-chunk prefill really happens and interleaves with
+    decode) emits tokens bit-identical to the monolithic engine, under
+    oversubscription with eviction and preemption."""
+    eng = _check_differential_workload(
+        [(20, 12, 1, 0.0), (16, 10, 2, 0.0), (9, 12, 0, 0.0),
+         (14, 8, 0, 0.0)], seed=123, prefill_chunk=4)
+    assert eng.scheduler.n_preempted > 0
+    assert eng.n_interleaved_steps > 0           # prefill mixed with decode
+    _check_differential_workload(                # sampled + greedy mix
+        [(13, 8, 0, 0.8), (5, 6, 1, 0.0), (18, 5, 0, 0.8)], seed=7,
+        prefill_chunk=8)
+
+
+def test_chunked_prefill_exactly_one_compile_across_lengths():
+    """Regression (the recompile-per-prompt-length failure mode must
+    never return silently): a mixed-length stream through the chunked
+    engine traces **exactly one** prefill program — counted on the jitted
+    chunk step itself — where the whole-prompt path would trace one per
+    distinct length.  A second engine with the same shape shares the
+    cached program (zero new traces)."""
+    cfg = smoke_variant(get("qwen3-8b"))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    # max_len=40 is this test's own jit-cache key; compress_cold=False so
+    # no second (cold-pool) trace can appear
+    kw = dict(max_batch=2, max_len=40, page_size=8, prefill_chunk=8)
+
+    def serve(lens, id_base):
+        eng = GenerationEngine(params, cfg, **kw)
+        reqs = [Request(prompt=[(i * 7 + j) % 50 + 1 for j in range(n)],
+                        max_new_tokens=3, id=id_base + i)
+                for i, n in enumerate(lens)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        assert all(r.done for r in reqs)
+        return eng
+
+    eng = serve([3, 7, 12, 17, 25, 31], id_base=11_000)
+    assert eng.n_chunks >= 10
+    assert eng.prefill_compile_count() == 1, eng.prefill_compile_count()
+    eng2 = serve([5, 9, 2, 33], id_base=11_100)   # new lengths, same program
+    assert eng2.prefill_compile_count() == 1, eng2.prefill_compile_count()
+
+
+def test_chunked_midprefill_preempt_resume_bit_identical():
+    """A request preempted **mid-prefill** (Preempted.prefill_pos set)
+    swaps its first chunks out, requeues, resumes prefill at the recorded
+    position and finishes bit-identical to an unpreempted run."""
+    cfg = smoke_variant(get("qwen3-8b"))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    req = Request(prompt=list(range(1, 21)), max_new_tokens=8, id=12_000)
+    ref, _ = _serve(params, cfg,
+                    [Request(prompt=list(req.prompt), max_new_tokens=8,
+                             id=req.id)], cache_mode="monolithic")
+    eng = GenerationEngine(params, cfg, max_batch=2, max_len=48,
+                           prefill_chunk=4, prefill_budget=4, **_OVERSUB)
+    eng.submit(req)
+    eng.step()                                   # one 4-token chunk in
+    slot = eng.slots.index(req)
+    assert eng._prefill_pos[slot] == 4
+    assert eng._preempt(slot)                    # force mid-prefill preempt
+    assert req not in eng.slots and not req.out_tokens
+    st = eng.scheduler.head()
+    assert st.prefill_pos == 4 and st.prefill_tokens_left == 16
+    eng.run()
+    assert req.done and req.out_tokens == ref[0]
+    assert eng.scheduler.n_resumed >= 1
+
+
+def test_scheduler_token_budget_blocks_new_prefill_work():
+    """pick() with an exhausted prefill budget admits only zero-prefill
+    items (decode-phase resumes); a budget-blocked class head blocks its
+    class, preserving FIFO."""
+    from repro.kvcache import PagedKVCache, SwapStore
+    from repro.serving.scheduler import Preempted, Scheduler
+    cfg = smoke_variant(get("qwen3-8b"))
+    pkv = PagedKVCache(cfg, 2, 64, dtype=jnp.float32, page_size=16)
+    pkv.attach_swap(SwapStore())
+    sched = Scheduler(paged=pkv, chunk_tokens=8)
+    a = Request(prompt=[1] * 10, max_new_tokens=4, id=13_000)
+    sched.submit(a)
+    assert sched.pick(0, prefill_budget=0) is None       # needs prefill
+    assert sched.pick(0, prefill_budget=8) is a
+    # a decode-phase resume admits even with no budget left
+    done = Preempted(req=Request(prompt=[1] * 4, max_new_tokens=4,
+                                 id=13_001),
+                     pages=[], skip=set(), host_len=5, last_tok=3)
+    sched.requeue(done)
+    assert sched.prefill_tokens(done) == 0
+    assert sched.pick(1, prefill_budget=0) is done
+
+
 if given is not None:
     workloads = st.lists(
         st.tuples(st.integers(1, 20),            # prompt length
@@ -378,6 +481,14 @@ if given is not None:
     @given(workloads, st.integers(0, 2**31 - 1))
     def test_differential_random_workloads_bit_identical(wl, seed):
         _check_differential_workload(wl, seed)
+
+    @given(workloads, st.integers(1, 12), st.integers(0, 2**31 - 1))
+    def test_chunked_random_workloads_bit_identical(wl, chunk, seed):
+        """Property: for any (prompt length, chunk size, priority,
+        temperature) mix — chunks bigger, smaller and incommensurate
+        with the page size — the chunked engine is bit-identical to the
+        monolithic reference, including runs that preempt mid-prefill."""
+        _check_differential_workload(wl, seed, prefill_chunk=chunk)
 
 
 @pytest.mark.slow
@@ -430,6 +541,62 @@ def test_oversubscribed_sharded_bit_identical():
         assert s['n_preempted'] > 0 and s['swap_in_bytes_total'] > 0
         assert len(eng.paged.swap) == 0
         print('oversubscribed sharded == single-device monolithic: OK')
+    """.replace("__OVERSUB_WL__", repr(_OVERSUB_WL)), devices=2)
+
+
+@pytest.mark.slow
+def test_chunked_prefill_sharded_bit_identical():
+    """Acceptance: the chunked-prefill engine on a 2-device data mesh
+    (owner-shard chunk writes, psum'd outputs) serves the oversubscribed
+    mixed-length workload bit-identical to the single-device monolithic
+    reference, with preemption mid-run and a bounded number of chunk
+    compilations across all prompt lengths."""
+    run_subprocess("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.configs import get, smoke_variant
+        from repro.models import model as M
+        from repro.serving import GenerationEngine, Request
+
+        cfg = smoke_variant(get('qwen3-8b'))
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+        def stream(extra=0):
+            prompts, news, prios = __OVERSUB_WL__
+            return [Request(prompt=p + [1] * extra, max_new_tokens=n,
+                            priority=pr, id=14_000 + 100 * extra + i)
+                    for i, (p, n, pr) in enumerate(
+                        zip(prompts, news, prios))]
+
+        def serve(mesh, reqs, **kw):
+            eng = GenerationEngine(params, cfg, max_batch=4, max_len=48,
+                                   mesh=mesh, **kw)
+            for r in reqs:
+                eng.submit(r)
+            eng.run()
+            assert all(r.done for r in reqs)
+            return [r.out_tokens for r in reqs], eng
+
+        kw = dict(cache_mode='paged', page_size=8, n_pages=8,
+                  compress_cold=True, n_cold_slots=2, swap_bytes=1 << 28,
+                  prefill_chunk=4)
+        mesh = Mesh(np.array(jax.devices()[:2]), ('data',))
+        mono, _ = serve(None, stream(), cache_mode='monolithic')
+        over, eng = serve(mesh, stream(), **kw)
+        assert eng.cache_mode == 'paged' and eng.paged.n_shards == 2
+        assert eng.prefill_chunk == 4 and eng.n_chunks > 0
+        assert over == mono, (over, mono)
+        assert eng.scheduler.n_preempted > 0
+        c1 = eng.prefill_compile_count()
+        # new prompt lengths reuse the same chunk program(s): the count
+        # must not grow with the length mix (<= 2 traces per cold/no-cold
+        # cache variant, sharding-commit included)
+        mono2, _ = serve(None, stream(extra=3), cache_mode='monolithic')
+        over2, eng2 = serve(mesh, stream(extra=3), **kw)
+        assert over2 == mono2
+        assert eng2.prefill_compile_count() == c1, (
+            eng2.prefill_compile_count(), c1)
+        print('chunked sharded == single-device monolithic: OK')
     """.replace("__OVERSUB_WL__", repr(_OVERSUB_WL)), devices=2)
 
 
