@@ -51,6 +51,7 @@ lifecycle (admit -> ensure -> compress cold -> release).
 """
 from __future__ import annotations
 
+import time
 import warnings
 
 import numpy as np
@@ -279,6 +280,9 @@ class PagedKVCache:
         self._skip: dict[int, set[int]] = {}
         self._cold_bytes: dict[int, int] = {}
         self.swap = None                # SwapStore (attach_swap)
+        self.telemetry = None           # serving.telemetry.Telemetry
+        #   (engine-set; evict/fault publish page counts and host<->device
+        #   swap spans through it — pure observation)
 
     # -- structure ---------------------------------------------------------
 
@@ -573,6 +577,8 @@ class PagedKVCache:
         # cold-first: already-compressed pages are the cheapest victims
         idxs.sort(key=lambda p: (pages[p] < self.n_pages, p))
         cache = dict(cache)
+        t0 = time.perf_counter()
+        n_moved = 0
         for p in idxs:
             e = pages[p]
             if e < 0 or e == GARBAGE_PAGE:
@@ -590,6 +596,14 @@ class PagedKVCache:
             pages[p] = -(key + 1)
             cache["page_table"] = cache["page_table"].at[slot, p].set(
                 -(key + 1))
+            n_moved += 1
+        if n_moved and self.telemetry is not None:
+            self.telemetry.registry.counter(
+                "kvcache_evict_pages_total").inc(n_moved)
+            if self.telemetry.tracer is not None:
+                self.telemetry.tracer.complete(
+                    "swap", "evict", "engine", t0,
+                    args={"slot": slot, "pages": n_moved})
         return cache
 
     def fault(self, cache: dict, slot: int, page_idxs=None):
@@ -628,6 +642,7 @@ class PagedKVCache:
                 f"{len(self._free[sh])} free")
 
         cache = dict(cache)
+        t0 = time.perf_counter()
         raw_jobs = []                   # (entry, pid) scattered after decode
         for p, sp, to_cold in plan:
             self.swap.pop(-pages[p] - 1)
@@ -659,6 +674,13 @@ class PagedKVCache:
 
         if raw_jobs:
             cache = self._restore_raw(cache, raw_jobs)
+        if self.telemetry is not None:
+            self.telemetry.registry.counter(
+                "kvcache_fault_pages_total").inc(len(plan))
+            if self.telemetry.tracer is not None:
+                self.telemetry.tracer.complete(
+                    "swap", "fault", "engine", t0,
+                    args={"slot": slot, "pages": len(plan)})
         return cache
 
     def _restore_raw(self, cache: dict, jobs):

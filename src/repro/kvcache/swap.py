@@ -99,9 +99,26 @@ class SwapStore:
         self.swap_in_bytes = 0
         self.n_swap_out = 0
         self.n_swap_in = 0
+        self._registry = None
 
     def __len__(self) -> int:
         return len(self._pages)
+
+    def attach_registry(self, registry) -> None:
+        """Publish store *levels* into a telemetry registry as gauges
+        (``kvcache_swap_bytes_used`` / ``kvcache_swap_pages``), updated
+        on every put/pop/discard.  Levels only: cumulative traffic flows
+        through ``stats()`` -> ``kvstat_*`` forwarding, because the
+        engine rolls the attribute counters back on an aborted eviction
+        and a monotone registry counter could not follow."""
+        self._registry = registry
+        self.sync_registry()
+
+    def sync_registry(self) -> None:
+        if self._registry is None:
+            return
+        self._registry.gauge("kvcache_swap_bytes_used").set(self.bytes_used)
+        self._registry.gauge("kvcache_swap_pages").set(len(self._pages))
 
     def put(self, page: SwappedPage, shard: int = 0) -> int:
         """Store a swapped page; returns its opaque swap key."""
@@ -118,6 +135,7 @@ class SwapStore:
         self.bytes_used_per_shard[shard] += page.nbytes
         self.swap_out_bytes += page.nbytes
         self.n_swap_out += 1
+        self.sync_registry()
         return key
 
     def peek(self, key: int) -> SwappedPage:
@@ -132,6 +150,7 @@ class SwapStore:
         self.bytes_used_per_shard[shard] -= page.nbytes
         self.swap_in_bytes += page.nbytes
         self.n_swap_in += 1
+        self.sync_registry()
         return page
 
     def discard(self, key: int) -> None:
@@ -143,6 +162,7 @@ class SwapStore:
         shard = self._shard_of.pop(key)
         self.bytes_used -= page.nbytes
         self.bytes_used_per_shard[shard] -= page.nbytes
+        self.sync_registry()
 
     def stats(self) -> dict:
         return {

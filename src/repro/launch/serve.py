@@ -31,7 +31,10 @@ from repro.core import fp8
 from repro.core.store import compress_tree, fp8_cast_tree
 from repro.models import model as M
 from repro.runtime.monitor import KVCacheMonitor
+from repro.runtime.trace_export import export_chrome_trace
+from repro.runtime.tracing import JaxProfilerHook
 from repro.serving import GenerationEngine, Request
+from repro.serving.telemetry import Telemetry, serving_report_line
 
 
 def tree_bytes(tree) -> int:
@@ -101,6 +104,22 @@ def main(argv=None):
                          "count=N).  --max-batch must be divisible by D or "
                          "the engine falls back to the monolithic cache.")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(per-request lifecycle spans + engine-phase "
+                         "spans + counter tracks; open in "
+                         "ui.perfetto.dev).  See docs/OBSERVABILITY.md.")
+    ap.add_argument("--metrics-interval", type=int, default=0,
+                    metavar="STEPS",
+                    help="print a one-line stats report every N engine "
+                         "steps (tokens, queue depth, step/TTFT "
+                         "percentiles)")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace into DIR "
+                         "over the --profile-steps window")
+    ap.add_argument("--profile-steps", default="0:1", metavar="A:B",
+                    help="engine-step window for --jax-profile "
+                         "(default 0:1)")
     args = ap.parse_args(argv)
 
     cfg = get(args.arch)
@@ -160,22 +179,58 @@ def main(argv=None):
         prefill_chunk=args.prefill_chunk,
         prefill_budget=args.prefill_budget or None,
     )
-    mon = KVCacheMonitor()
+    tel = Telemetry(trace=args.trace_out is not None)
+    mon = KVCacheMonitor(registry=tel.registry)
     eng = GenerationEngine(params_c, cfg, max_batch=args.max_batch,
                            max_len=args.max_len, kv_monitor=mon, mesh=mesh,
-                           **cache_kw)
+                           telemetry=tel, **cache_kw)
     reqs = [Request(prompt=p, max_new_tokens=args.max_new) for p in prompts]
     for r in reqs:
         eng.submit(r)
+
+    profiler = None
+    if args.jax_profile:
+        try:
+            a, b = (int(x) for x in args.profile_steps.split(":"))
+        except ValueError:
+            raise SystemExit(f"--profile-steps {args.profile_steps!r}: "
+                             f"expected 'A:B' (engine-step window)")
+        profiler = JaxProfilerHook(args.jax_profile, a, b)
+
+    def on_step(i):
+        if profiler is not None:
+            profiler.on_step(i)
+        if args.metrics_interval and (i + 1) % args.metrics_interval == 0:
+            print(f"[serve] step {i + 1}: "
+                  f"{serving_report_line(tel.registry)}")
+
     t0 = time.time()
-    done = eng.run()
+    done = eng.run(on_step=on_step)
     dt = time.time() - t0
+    if profiler is not None:
+        profiler.close()
+        print(f"[serve] jax.profiler trace in {args.jax_profile}")
+    if args.trace_out:
+        trace = export_chrome_trace(tel.tracer, args.trace_out,
+                                    registry=tel.registry)
+        print(f"[serve] wrote {args.trace_out}: "
+              f"{len(trace['traceEvents'])} trace events "
+              f"({tel.tracer.n_dropped} dropped) — open in "
+              f"ui.perfetto.dev")
     n_tok = sum(len(r.out_tokens) for r in done)
     print(f"[serve] {len(done)} requests, {n_tok} tokens in {dt:.1f}s "
           f"({n_tok / max(dt, 1e-9):.1f} tok/s host wall-clock, "
           f"{eng.steps} decode steps, batch occupancy "
           f"{n_tok / max(eng.steps, 1):.2f})")
-    if eng.cache_mode == "paged" and mon.samples:
+    ttft = tel.registry.get("serving_ttft_seconds")
+    lat = tel.registry.get("serving_request_latency_seconds")
+    if ttft is not None and ttft.count:
+        print(f"[serve] ttft p50/p95/p99 "
+              f"{ttft.percentile(0.5) * 1e3:.0f}/"
+              f"{ttft.percentile(0.95) * 1e3:.0f}/"
+              f"{ttft.percentile(0.99) * 1e3:.0f}ms, request latency p50 "
+              f"{lat.percentile(0.5):.2f}s p99 {lat.percentile(0.99):.2f}s")
+    if eng.cache_mode == "paged" and mon.n_samples:
         s = mon.summary()
         ratio = s["cold_compression_ratio"]
         cold = (f"cold-page compression {ratio:.3f}x raw"
@@ -185,10 +240,7 @@ def main(argv=None):
               f"{s['monolithic_bytes'] / 1e6:.3f}MB "
               f"({100 * (1 - s['paged_vs_monolithic']):.1f}% saved), {cold}")
         if eng.paged.n_shards > 1:
-            peak_shard = [max(st["pages_in_use_per_shard"][k]
-                              for st in mon.samples)
-                          for k in range(eng.paged.n_shards)]
-            print(f"[serve] pages-per-shard peak {peak_shard} "
+            print(f"[serve] pages-per-shard peak {mon.peak_per_shard()} "
                   f"(free now {eng.paged.free_pages_per_shard})")
         if eng.prefill_chunk:
             print(f"[serve] chunked prefill (chunk={eng.prefill_chunk}, "

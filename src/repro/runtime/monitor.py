@@ -1,4 +1,4 @@
-"""Step-time tracking and straggler detection.
+"""Step-time tracking, straggler detection, and KV-cache accounting.
 
 At 1000+ node scale, synchronous SPMD training is gated by the slowest
 worker every step.  The mitigation stack implemented/documented here:
@@ -15,10 +15,14 @@ worker every step.  The mitigation stack implemented/documented here:
      ``checkpoint.manager``).
 
 This is host-side instrumentation (wall clock), so it works identically on
-CPU and real pods.
+CPU and real pods.  The serving engine reuses :class:`StragglerMonitor`
+for decode-step outlier detection, surfacing alarms through the
+telemetry registry (``serving_decode_straggler_total``; see
+``docs/OBSERVABILITY.md``).
 """
 from __future__ import annotations
 
+import math
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -39,7 +43,10 @@ class StragglerMonitor:
     min_samples: int = 10
     ewma_alpha: float = 0.05
     _times: deque = field(default_factory=lambda: deque(maxlen=200))
-    _ewma: float = 0.0
+    # None = no sample yet; a legitimate 0.0-second first sample (clock
+    # granularity, mocked clocks) must seed the EWMA, not be mistaken
+    # for "uninitialized"
+    _ewma: float | None = None
     _t0: float = 0.0
     alarms: list = field(default_factory=list)
 
@@ -48,6 +55,12 @@ class StragglerMonitor:
 
     def stop(self, step: int) -> StepStats:
         dt = time.perf_counter() - self._t0
+        return self.observe(dt, step)
+
+    def observe(self, dt: float, step: int) -> StepStats:
+        """Record an externally measured step duration (the serving
+        engine times its decode step once and feeds both this and its
+        latency histogram from the same measurement)."""
         window = list(self._times)[-self.window:]
         if len(window) >= self.min_samples:
             srt = sorted(window)
@@ -59,7 +72,7 @@ class StragglerMonitor:
         is_straggler = (len(window) >= self.min_samples
                         and z > self.threshold_mads)
         self._times.append(dt)
-        self._ewma = (dt if self._ewma == 0.0
+        self._ewma = (dt if self._ewma is None
                       else (1 - self.ewma_alpha) * self._ewma
                       + self.ewma_alpha * dt)
         stats = StepStats(step=step, seconds=dt, z=z,
@@ -70,80 +83,134 @@ class StragglerMonitor:
 
     @property
     def ewma_seconds(self) -> float:
-        return self._ewma
+        return 0.0 if self._ewma is None else self._ewma
 
 
 # --------------------------------------------------------------------------
 # KV-cache accounting (serving)
 # --------------------------------------------------------------------------
 
-@dataclass
+#: stats keys whose per-step values are lists (per batch shard) — kept as
+#: element-wise peaks inside the monitor rather than registry gauges
+_LIST_KEYS = ("pages_in_use_per_shard", "free_pages_per_shard",
+              "swap_bytes_per_shard")
+
+#: forwarded-gauge namespace: every scalar stats key ``k`` recorded by the
+#: engine lands in the registry as gauge ``kvstat_<k>`` (enumerated in
+#: docs/OBSERVABILITY.md)
+STAT_PREFIX = "kvstat_"
+
+
 class KVCacheMonitor:
-    """Per-step KV-cache memory accounting for the paged serving engine.
+    """Per-step KV-cache accounting as a thin consumer of the telemetry
+    metrics registry.
 
     The engine records ``PagedKVCache.stats()`` (merged with the
-    scheduler's counters) after every decode step; ``summary()`` reduces
-    the trace to the numbers the serving report prints: peak/mean paged
-    bytes vs the monolithic ``(B, max_len)`` cache it replaced, the
-    cold-page compression ratio, and — when the swap tier is attached —
-    swap traffic (cumulative swap-in/out bytes, peak host-resident
-    bytes) and preemption counts."""
+    scheduler's counters) after every step; instead of keeping its own
+    list-of-dicts trace, the monitor forwards every scalar stat into a
+    registry gauge named ``kvstat_<key>`` (gauges track last value +
+    lifetime peak), keeps element-wise peaks for the per-shard list
+    stats, and tracks the one correlated pair the summary needs (cold
+    bytes at the step holding the most cold data — a ratio of maxima
+    taken at different steps would be fictional).
 
-    samples: list = field(default_factory=list)
+    ``summary()`` reduces that to the numbers the serving report
+    prints: peak/mean paged bytes vs the monolithic ``(B, max_len)``
+    cache, the cold-page compression ratio, swap traffic and preemption
+    counts.  Every key is read with a default, so a monitor shared
+    across mixed engines (some without a swap tier or chunked prefill)
+    summarizes what it saw instead of raising ``KeyError``.
+
+    Pass the engine's ``Telemetry.registry`` to publish into the shared
+    registry; by default the monitor owns a private one."""
+
+    def __init__(self, registry=None):
+        if registry is None:
+            from repro.serving.telemetry import MetricsRegistry
+            registry = MetricsRegistry()
+        self.registry = registry
+        self.n_samples = 0
+        self._keys: set = set()             # scalar stat keys ever seen
+        self._shard_peaks: dict = {}        # list-key -> per-shard peaks
+        self._cold_peak = (0, 0)            # (raw-equiv bytes, ragged bytes)
 
     def record(self, stats: dict) -> None:
-        self.samples.append(dict(stats))
+        self.n_samples += 1
+        reg = self.registry
+        for k, v in stats.items():
+            if k in _LIST_KEYS or isinstance(v, (list, tuple)):
+                peaks = self._shard_peaks.setdefault(k, [])
+                for i, x in enumerate(v):
+                    if i >= len(peaks):
+                        peaks.append(x)
+                    elif x > peaks[i]:
+                        peaks[i] = x
+            elif isinstance(v, (int, float)):
+                self._keys.add(k)
+                reg.gauge(STAT_PREFIX + k).set(v)
+        # derived, correlated stats: total pages this step, and the cold
+        # ratio at the step holding the most cold data
+        total = (stats.get("pages_in_use", 0)
+                 + stats.get("cold_pages_in_use", 0))
+        reg.gauge(STAT_PREFIX + "pages_in_use_total").set(total)
+        cold_raw = (stats.get("cold_pages_in_use", 0)
+                    * stats.get("page_bytes", 0))
+        if cold_raw > self._cold_peak[0]:
+            self._cold_peak = (cold_raw, stats.get("cold_bytes_ragged", 0))
+
+    # -- registry readers --------------------------------------------------
+
+    def _peak(self, key: str, default=0):
+        g = self.registry.get(STAT_PREFIX + key)
+        return default if g is None or not g.n_sets else g.peak
+
+    def _last(self, key: str, default=0):
+        g = self.registry.get(STAT_PREFIX + key)
+        return default if g is None or not g.n_sets else g.value
+
+    def peak_per_shard(self, key: str = "pages_in_use_per_shard") -> list:
+        """Element-wise peak of a per-shard list stat (empty when the
+        engine never reported it)."""
+        return list(self._shard_peaks.get(key, ()))
 
     @property
     def peak_paged_bytes(self) -> int:
-        return max((s["cache_bytes_paged"] for s in self.samples), default=0)
+        return self._peak("cache_bytes_paged")
 
     @property
     def peak_raw_equiv_bytes(self) -> int:
-        return max((s["cache_bytes_raw_equiv"] for s in self.samples),
-                   default=0)
+        return self._peak("cache_bytes_raw_equiv")
 
     def summary(self) -> dict:
-        if not self.samples:
+        if not self.n_samples:
             return {}
-        mono = self.samples[-1]["monolithic_bytes"]
+        mono = self._last("monolithic_bytes")
         peak = self.peak_paged_bytes
-        peak_raw = self.peak_raw_equiv_bytes
-        # the observed ratio at the step holding the most cold data (a
-        # ratio of maxima taken at different steps would be fictional)
-        cold_peak = max(self.samples,
-                        key=lambda s: s["cold_pages_in_use"] * s["page_bytes"])
-        cold_raw = cold_peak["cold_pages_in_use"] * cold_peak["page_bytes"]
-        last = self.samples[-1]
+        cold_raw, cold_ragged = self._cold_peak
         out = {
-            "steps": len(self.samples),
+            "steps": self.n_samples,
             "monolithic_bytes": mono,
             "peak_paged_bytes": peak,
-            "peak_raw_equiv_bytes": peak_raw,
-            "peak_pages_in_use": max(s["pages_in_use"] + s["cold_pages_in_use"]
-                                     for s in self.samples),
+            "peak_raw_equiv_bytes": self.peak_raw_equiv_bytes,
+            "peak_pages_in_use": self._peak("pages_in_use_total"),
             "paged_vs_monolithic": peak / max(mono, 1),
-            "cold_compression_ratio": (cold_peak["cold_bytes_ragged"]
-                                       / cold_raw
-                                       if cold_raw else float("nan")),
+            "cold_compression_ratio": (cold_ragged / cold_raw
+                                       if cold_raw else math.nan),
         }
-        if "swap_bytes_used" in last:     # swap tier attached
+        if "swap_bytes_used" in self._keys:     # swap tier attached
             out.update({
-                "peak_swap_bytes": max(s.get("swap_bytes_used", 0)
-                                       for s in self.samples),
-                "peak_swapped_pages": max(s.get("swapped_pages", 0)
-                                          for s in self.samples),
-                "swap_out_bytes_total": last.get("swap_out_bytes_total", 0),
-                "swap_in_bytes_total": last.get("swap_in_bytes_total", 0),
-                "n_preempted": last.get("n_preempted", 0),
-                "n_resumed": last.get("n_resumed", 0),
+                "peak_swap_bytes": self._peak("swap_bytes_used"),
+                "peak_swapped_pages": self._peak("swapped_pages"),
+                "swap_out_bytes_total": self._last("swap_out_bytes_total"),
+                "swap_in_bytes_total": self._last("swap_in_bytes_total"),
+                "n_preempted": self._last("n_preempted"),
+                "n_resumed": self._last("n_resumed"),
             })
-        if "n_prefill_chunks" in last:    # chunked prefill active
+        if "n_prefill_chunks" in self._keys:    # chunked prefill active
             out.update({
-                "n_prefill_chunks": last["n_prefill_chunks"],
-                "prefill_chunk_tokens": last["prefill_chunk_tokens"],
-                "n_interleaved_steps": last["n_interleaved_steps"],
-                "peak_prefilling_slots": max(s.get("prefilling_slots", 0)
-                                             for s in self.samples),
+                "n_prefill_chunks": self._last("n_prefill_chunks"),
+                "prefill_chunk_tokens": self._last("prefill_chunk_tokens"),
+                "n_interleaved_steps": self._last("n_interleaved_steps"),
+                "peak_prefilling_slots": self._peak("prefilling_slots"),
             })
         return out

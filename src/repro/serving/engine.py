@@ -74,6 +74,7 @@ still fall back to it.
 from __future__ import annotations
 
 import itertools
+import time
 import warnings
 from dataclasses import dataclass, field
 
@@ -183,7 +184,8 @@ class GenerationEngine:
                  n_pages: int | None = None, compress_cold: bool = False,
                  n_cold_slots: int | None = None, kv_monitor=None,
                  swap_bytes: int | None = None, preemption: bool = True,
-                 prefill_chunk: int = 0, prefill_budget: int | None = None):
+                 prefill_chunk: int = 0, prefill_budget: int | None = None,
+                 telemetry=None):
         """``mesh``: optional ``jax.sharding.Mesh``; the paged cache shards
         over its batch axes (see module docstring) and decode/prefill steps
         are jitted against it.  ``cache_mode``/``page_size``/``n_pages``/
@@ -203,7 +205,14 @@ class GenerationEngine:
         prompt tokens spent on prefill per engine step (default: one
         chunk).  Chunked prefill needs the paged cache, an architecture
         whose every layer pages, and a mesh without a model axis —
-        otherwise the engine warns and prefills whole prompts."""
+        otherwise the engine warns and prefills whole prompts.
+
+        ``telemetry`` (``serving.telemetry.Telemetry``) turns on the
+        observability subsystem: per-request lifecycle spans and
+        engine-phase spans on its tracer, latency/TTFT/step-time
+        histograms and queue/pages gauges in its registry (metric names:
+        docs/OBSERVABILITY.md).  Pure host-side observation — the token
+        stream is bit-identical with telemetry on or off."""
         self.params, self.cfg = params, cfg
         self.max_batch, self.max_len = max_batch, max_len
         self.mesh = mesh
@@ -285,15 +294,90 @@ class GenerationEngine:
                        if chunk else None)
         self.last_tok = jnp.zeros((max_batch, 1), jnp.int32)
         self.steps = 0
+        # telemetry is host-side observation only (None = off): per-request
+        # lifecycle spans, engine-phase spans and the metrics registry
+        self.tel = telemetry
+        self._submit_t: dict = {}       # request id -> submit wall time
+        self._straggler = None
+        if telemetry is not None:
+            from repro.runtime.monitor import (KVCacheMonitor,
+                                               StragglerMonitor)
+            self._straggler = StragglerMonitor()
+            if self.kv_monitor is None:
+                self.kv_monitor = KVCacheMonitor(
+                    registry=telemetry.registry)
+            self.scheduler.telemetry = telemetry
+            if self.paged is not None:
+                self.paged.telemetry = telemetry
+                if self.paged.swap is not None:
+                    self.paged.swap.attach_registry(telemetry.registry)
+        # the jit caches are shared across engines: remember the counts at
+        # construction so compile events register only when *this* engine
+        # triggers a trace
+        self._decode_compiles_seen = compile_count(self._decode)
+        self._prefill_compiles_seen = self.prefill_compile_count()
+
+    # -- telemetry ---------------------------------------------------------
+
+    def _note_compiles(self):
+        """Publish newly traced programs since the last check as compile
+        events — decode retraces (e.g. the no-cold variant appearing)
+        used to be invisible next to the prefill count."""
+        tel = self.tel
+        if tel is None:
+            return
+        n = compile_count(self._decode)
+        if n > self._decode_compiles_seen:
+            tel.registry.counter("serving_decode_compile_total").inc(
+                n - self._decode_compiles_seen)
+            if tel.tracer is not None:
+                tel.tracer.instant("engine", "decode_compile",
+                                   args={"step": self.steps})
+            self._decode_compiles_seen = n
+        n = self.prefill_compile_count()
+        if n > self._prefill_compiles_seen:
+            tel.registry.counter("serving_prefill_compile_total").inc(
+                n - self._prefill_compiles_seen)
+            if tel.tracer is not None:
+                tel.tracer.instant("engine", "prefill_compile",
+                                   args={"step": self.steps})
+            self._prefill_compiles_seen = n
+
+    def _sample_gauges(self):
+        """Per-step level samples: queue depth and slot occupancy, as
+        registry gauges (peak-tracking) and tracer counter tracks."""
+        tel = self.tel
+        if tel is None:
+            return
+        q = self.scheduler.waiting
+        act = sum(1 for s in self.slots if s is not None)
+        tel.registry.gauge("serving_queue_depth").set(q)
+        tel.registry.gauge("serving_active_slots").set(act)
+        if self.prefill_chunk:
+            tel.registry.gauge("serving_prefilling_slots").set(
+                len(self._prefill_pos))
+        if tel.tracer is not None:
+            tel.tracer.counter("serving_queue_depth", q)
+            tel.tracer.counter("serving_active_slots", act)
 
     # -- scheduling --------------------------------------------------------
 
     def submit(self, req: Request):
         self.scheduler.submit(req)
         self._inflight.append(req)
+        if self.tel is not None:
+            self._submit_t[req.id] = time.perf_counter()
+            self.tel.registry.counter(
+                "serving_requests_submitted_total").inc()
+            if self.tel.requests is not None:
+                self.tel.requests.transition(req.id, "queued")
 
     def _start(self, slot: int, req: Request):
         """Prefill a fresh request and splice it into ``slot``."""
+        tel, t0 = self.tel, time.perf_counter()
+        if tel is not None and tel.requests is not None:
+            tel.requests.transition(req.id, "prefilling",
+                                    args={"slot": slot})
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
         logits, frag = self._prefill(self.params, toks)
         if self.paged is not None:
@@ -306,6 +390,22 @@ class GenerationEngine:
         req.out_tokens.append(int(tok))
         self.last_tok = self.last_tok.at[slot, 0].set(tok)
         self.slots[slot] = req
+        if tel is not None:
+            now = time.perf_counter()
+            sub = self._submit_t.get(req.id)
+            if sub is not None:
+                tel.registry.histogram("serving_queue_wait_seconds").observe(
+                    t0 - sub)
+                tel.registry.histogram("serving_ttft_seconds").observe(
+                    now - sub)
+            tel.registry.counter("serving_tokens_generated_total").inc()
+            if tel.tracer is not None:
+                tel.tracer.complete("engine", "prefill", "engine", t0, now,
+                                    args={"req": req.id,
+                                          "tokens": len(req.prompt)})
+            if tel.requests is not None:
+                tel.requests.transition(req.id, "decoding")
+            self._note_compiles()
 
     def _start_chunked(self, slot: int, req: Request):
         """Admit a request for chunked prefill: allocate its page grant
@@ -319,6 +419,15 @@ class GenerationEngine:
         self._prefill_pos[slot] = 0
         self._prefill_order.append(slot)
         self.slots[slot] = req
+        if self.tel is not None:
+            sub = self._submit_t.get(req.id)
+            if sub is not None:
+                self.tel.registry.histogram(
+                    "serving_queue_wait_seconds").observe(
+                        time.perf_counter() - sub)
+            if self.tel.requests is not None:
+                self.tel.requests.transition(req.id, "prefilling",
+                                             args={"slot": slot})
 
     def _resume(self, slot: int, st: Preempted):
         """Re-splice a preempted request: reinstall its page list, fault
@@ -327,6 +436,7 @@ class GenerationEngine:
         the continuation is bit-identical to an unpreempted run.  A
         mid-prefill record re-enters the prefill phase at
         ``st.prefill_pos`` instead of rejoining the decode batch."""
+        tel, t0 = self.tel, time.perf_counter()
         self.cache = self.paged.attach_slot(self.cache, slot, st.pages,
                                             st.skip)
         self.cache = self.paged.fault(self.cache, slot)
@@ -344,12 +454,26 @@ class GenerationEngine:
             self.last_tok = self.last_tok.at[slot, 0].set(st.last_tok)
         self.slots[slot] = st.req
         self.scheduler.n_resumed += 1
+        if tel is not None:
+            now = time.perf_counter()
+            tel.registry.counter("serving_resumed_total").inc()
+            tel.registry.histogram("serving_resume_seconds").observe(
+                now - t0)
+            if tel.tracer is not None:
+                tel.tracer.complete("engine", "resume", "engine", t0, now,
+                                    args={"req": st.req.id, "slot": slot})
+            if tel.requests is not None:
+                tel.requests.transition(
+                    st.req.id, ("prefilling" if st.prefill_pos is not None
+                                else "decoding"),
+                    args={"slot": slot, "resumed": True})
 
     def _preempt(self, slot: int) -> bool:
         """Swap out a whole active request and requeue it (front of its
         priority class).  Returns False — with the engine state intact —
         when the swap store cannot take the pages."""
         req = self.slots[slot]
+        tel, t0 = self.tel, time.perf_counter()
         store = self.paged.swap
         traffic = (store.swap_out_bytes, store.swap_in_bytes,
                    store.n_swap_out, store.n_swap_in)
@@ -363,6 +487,10 @@ class GenerationEngine:
             self.cache = self.paged.fault(self.cache, slot)
             (store.swap_out_bytes, store.swap_in_bytes,
              store.n_swap_out, store.n_swap_in) = traffic
+            store.sync_registry()
+            if tel is not None and tel.tracer is not None:
+                tel.tracer.instant("engine", "preempt_aborted",
+                                   args={"req": req.id, "slot": slot})
             return False
         state = self.paged.snapshot_slot_state(self.cache, slot)
         pages, skip = self.paged.detach_slot(slot)
@@ -376,6 +504,16 @@ class GenerationEngine:
         self.slots[slot] = None
         self.scheduler.n_preempted += 1
         self.scheduler.requeue(st)
+        if tel is not None:
+            now = time.perf_counter()
+            tel.registry.counter("serving_preempted_total").inc()
+            tel.registry.histogram("serving_preempt_seconds").observe(
+                now - t0)
+            if tel.tracer is not None:
+                tel.tracer.complete("engine", "preempt", "engine", t0, now,
+                                    args={"req": req.id, "slot": slot})
+            if tel.requests is not None:
+                tel.requests.transition(req.id, "preempted")
         return True
 
     def _admit(self, prefill_budget: int | None = None):
@@ -494,6 +632,7 @@ class GenerationEngine:
             toks = jnp.asarray(list(part) + [0] * (C - n),
                                jnp.int32)[None, :]
             cache_in, stash = self._maybe_strip()
+            tc0 = time.perf_counter()
             logits, new_cache = self._chunk(self.params, toks, cache_in,
                                             slot, n)
             self.cache = (restore_cold(new_cache, stash) if stash
@@ -503,12 +642,27 @@ class GenerationEngine:
             self.n_chunks += 1
             self.n_chunk_tokens += n
             spent += n
+            tel = self.tel
+            if tel is not None:
+                tel.registry.histogram(
+                    "serving_prefill_chunk_seconds").observe(
+                        time.perf_counter() - tc0)
             if pos + n >= len(req.prompt):      # final chunk: first token
                 tok = self._sample_one(logits, req)
                 req.out_tokens.append(int(tok))
                 self.last_tok = self.last_tok.at[slot, 0].set(tok)
                 del self._prefill_pos[slot]
                 self._prefill_order.remove(slot)
+                if tel is not None:
+                    sub = self._submit_t.get(req.id)
+                    if sub is not None:
+                        tel.registry.histogram(
+                            "serving_ttft_seconds").observe(
+                                time.perf_counter() - sub)
+                    tel.registry.counter(
+                        "serving_tokens_generated_total").inc()
+                    if tel.requests is not None:
+                        tel.requests.transition(req.id, "decoding")
         return spent
 
     def _prefill_phase(self) -> int:
@@ -519,6 +673,7 @@ class GenerationEngine:
         first chunks in the same step.  Returns tokens spent."""
         budget = self.prefill_budget
         spent = 0
+        t0 = time.perf_counter()
         self._stalled_ids.clear()
         while True:
             for slot in list(self._prefill_order):
@@ -532,6 +687,12 @@ class GenerationEngine:
             if len(self._prefill_order) == before or spent >= budget \
                     or not had_free:
                 break
+        if spent and self.tel is not None:
+            if self.tel.tracer is not None:
+                self.tel.tracer.complete("engine", "prefill_phase",
+                                         "engine", t0,
+                                         args={"tokens": spent})
+            self._note_compiles()
         return spent
 
     # -- stepping ----------------------------------------------------------
@@ -566,6 +727,7 @@ class GenerationEngine:
         if not active:
             if self._prefill_pos:
                 self._record_monitor()
+                self._sample_gauges()
                 return True         # prefill in flight, nothing to decode
             return self.scheduler.waiting > 0
         if self.paged is not None:
@@ -584,6 +746,7 @@ class GenerationEngine:
                     self.cache = self.paged.fault(self.cache, s)
         # while nothing is cold, run the decode variant without the cold
         # pool (its in-graph entropy decode would be pure waste)
+        t_dec = time.perf_counter()
         cache_in, stash = self._maybe_strip()
         logits, new_cache = self._decode(self.params, self.last_tok,
                                          cache_in)
@@ -621,6 +784,30 @@ class GenerationEngine:
 
             got = np.asarray(jax.vmap(draw)(rows, ids, pos, temps))
             sampled = dict(zip(samp, got.tolist()))
+        tel = self.tel
+        if tel is not None:
+            # one timing feeds the step histogram and the straggler
+            # monitor (np.asarray above materialized the device work)
+            now = time.perf_counter()
+            dt = now - t_dec
+            tel.registry.histogram("serving_decode_step_seconds").observe(dt)
+            sstat = self._straggler.observe(dt, self.steps)
+            tel.registry.gauge("serving_decode_step_ewma_seconds").set(
+                self._straggler.ewma_seconds)
+            if sstat.is_straggler:
+                tel.registry.counter("serving_decode_straggler_total").inc()
+                if tel.tracer is not None:
+                    tel.tracer.instant("engine", "decode_straggler",
+                                       args={"step": self.steps,
+                                             "z": sstat.z, "seconds": dt})
+            if tel.tracer is not None:
+                tel.tracer.complete("engine", "decode_step", "engine",
+                                    t_dec, now,
+                                    args={"step": self.steps,
+                                          "active": len(active)})
+            tel.registry.counter("serving_tokens_generated_total").inc(
+                len(active))
+            self._note_compiles()
         for s in active:
             req = self.slots[s]
             t = int(toks[s, 0] if req.temperature <= 0 else sampled[s])
@@ -631,6 +818,17 @@ class GenerationEngine:
                     len(req.prompt) + len(req.out_tokens) >= self.max_len):
                 req.done = True
                 self.slots[s] = None
+                if tel is not None:
+                    tel.registry.counter(
+                        "serving_requests_finished_total").inc()
+                    sub = self._submit_t.pop(req.id, None)
+                    if sub is not None:
+                        tel.registry.histogram(
+                            "serving_request_latency_seconds").observe(
+                                time.perf_counter() - sub)
+                    if tel.requests is not None:
+                        tel.requests.finish(
+                            req.id, args={"tokens": len(req.out_tokens)})
                 if self.paged is not None:
                     self.cache = self.paged.release(self.cache, s)
         if self.paged is not None and self.paged.compress:
@@ -639,6 +837,7 @@ class GenerationEngine:
                     self.cache = self.paged.compress_cold_pages(
                         self.cache, s, self._host_len[s])
         self._record_monitor()
+        self._sample_gauges()
         return True
 
     def _record_monitor(self):
@@ -654,6 +853,13 @@ class GenerationEngine:
                 "prefilling_slots": len(self._prefill_pos),
             })
         self.kv_monitor.record(stats)
+        if self.tel is not None and self.tel.tracer is not None:
+            tr = self.tel.tracer
+            tr.counter("kvcache_pages_in_use",
+                       stats.get("pages_in_use", 0))
+            if "swap_bytes_used" in stats:
+                tr.counter("kvcache_swap_bytes_used",
+                           stats["swap_bytes_used"])
 
     def prefill_compile_count(self) -> int:
         """Traced-program count of this engine's prefill path: the chunk
@@ -663,13 +869,24 @@ class GenerationEngine:
         return compile_count(self._chunk if self.prefill_chunk
                              else self._prefill)
 
-    def run(self, max_steps: int = 10_000) -> list:
+    def decode_compile_count(self) -> int:
+        """Traced-program count of this engine's decode step (1, or 2
+        once cold pages appear and the no-cold variant retraces).  The
+        registry's ``serving_decode_compile_total`` counts the retraces
+        this engine itself triggered while stepping."""
+        return compile_count(self._decode)
+
+    def run(self, max_steps: int = 10_000, on_step=None) -> list:
         """Drain the queue; returns every submitted request that finished
         (whether it was queued, already admitted to a slot, or preempted
         when ``run`` was called — ``submit`` is the tracking point, not
-        the queue snapshot)."""
-        for _ in range(max_steps):
+        the queue snapshot).  ``on_step(step_index)``, when given, is
+        called after every engine step (``launch/serve.py`` hangs the
+        periodic stats line and the jax.profiler window off it)."""
+        for i in range(max_steps):
             busy = self.step()
+            if on_step is not None:
+                on_step(i)
             if not busy and not any(s is not None for s in self.slots):
                 break
         done = [r for r in self._inflight if r.done]

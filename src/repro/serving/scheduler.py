@@ -74,6 +74,7 @@ class Scheduler:
     paged: object = None
     preemption: bool = True
     chunk_tokens: int = 0      # engine's prefill chunk (0 = whole-prompt)
+    telemetry: object = None   # serving.telemetry.Telemetry (engine-set)
     _classes: dict = field(default_factory=dict)   # priority -> deque
     _clock: int = 0
     _last_used: dict = field(default_factory=dict)  # slot -> stamp
@@ -82,12 +83,21 @@ class Scheduler:
 
     # -- queue -------------------------------------------------------------
 
+    def _note_depth(self) -> None:
+        # gauge on every enqueue/dequeue (not just once per engine step)
+        # so the peak catches transient depth inside an admission pass
+        if self.telemetry is not None:
+            self.telemetry.registry.gauge("serving_queue_depth").set(
+                self.waiting)
+
     def submit(self, req) -> None:
         self._classes.setdefault(req.priority, deque()).append(req)
+        self._note_depth()
 
     def requeue(self, state: Preempted) -> None:
         """Preempted work resumes before new work of its class."""
         self._classes.setdefault(state.priority, deque()).appendleft(state)
+        self._note_depth()
 
     @property
     def waiting(self) -> int:
@@ -203,7 +213,9 @@ class Scheduler:
         if self.paged is None:
             for p in self._priorities():
                 self.touch(slot)
-                return self._classes[p].popleft()
+                item = self._classes[p].popleft()
+                self._note_depth()
+                return item
             return None
         shard = self.paged.shard_of_slot(slot)
         for p in self._priorities():
@@ -218,6 +230,7 @@ class Scheduler:
                 if self._fits(item, shard):
                     del q[i]
                     self.touch(slot)
+                    self._note_depth()
                     return item
                 break               # class head blocks in-class backfill
         return None
