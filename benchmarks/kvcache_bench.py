@@ -15,7 +15,10 @@ an engine-level savings table (paged pages-in-use vs the monolithic
 >= 2x the raw pool, served through the host swap tier + preemptive
 scheduler (``--swap-bytes``), reporting swap-in/out bytes and preemption
 counts and asserting the tokens stay bit-identical to the monolithic
-reference; and a **sharded variant** (subprocess with virtual devices,
+reference; a **speculative variant** (``run_speculative``): a
+zero-extended draft/target pair served at batch 1, reporting acceptance
+rate vs tok/s speedup and asserting the spec tokens bit-identical to
+target-only; and a **sharded variant** (subprocess with virtual devices,
 like tests/test_sharding.py) that serves the same stream on a 2-way data
 mesh and a 2-way model mesh, recording pages-per-shard and the
 cross-shard gather cost of each layout (zero page bytes on the data mesh
@@ -122,6 +125,7 @@ def run(verbose: bool = True):
 
     over = run_oversubscribed(verbose=verbose)
     mixed = run_mixed(verbose=verbose)
+    speculative = run_speculative(verbose=verbose)
     sharded = run_sharded(verbose=verbose)
     return {
         "layers": len(rows),
@@ -131,8 +135,121 @@ def run(verbose: bool = True):
         "cold_compression_ratio": s["cold_compression_ratio"],
         "oversubscribed": over,
         "mixed": mixed,
+        "speculative": speculative,
         "sharded": sharded,
     }
+
+
+def _zero_extended_target(dparams, dcfg, tcfg, seed: int = 99):
+    """Graft the draft's weights into a deeper target whose extra blocks
+    are exact identities: the extra layers' output projections (attn
+    ``wo`` and mlp ``wo``) are zeroed, so each contributes ``x + 0`` to
+    the residual stream and the target's logits are **bit-equal** to the
+    draft's — while a target step costs ``n_layers_t / n_layers_d`` x
+    the draft step.  This turns the smoke-shape speculative bench into a
+    real measurement: acceptance is 1.0 by construction (random smoke
+    weights would accept ~1/V of proposals) and any speedup comes from
+    the engine actually replacing k+1 target decode steps with cheap
+    draft steps plus one k+1-wide verify forward."""
+    tparams = M.init_params(jax.random.PRNGKey(seed), tcfg)
+    n_d = dcfg.n_layers
+    dflat = {jax.tree_util.keystr(p): v
+             for p, v in jax.tree_util.tree_flatten_with_path(dparams)[0]}
+
+    def graft(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", k)))
+                 for k in path]
+        if "units" not in names:
+            return dflat[jax.tree_util.keystr(path)]    # embed/norm/unembed
+        if names[-1] == "wo":
+            leaf = jnp.zeros_like(leaf)
+        return leaf.at[:n_d].set(dflat[jax.tree_util.keystr(path)])
+
+    return jax.tree_util.tree_map_with_path(graft, tparams)
+
+
+def run_speculative(verbose: bool = True, spec_k: int = 4,
+                    target_layers: int = 16):
+    """Speculative decoding headline: acceptance rate vs tok/s speedup.
+
+    Serves the same greedy stream through the target-only engine and the
+    speculative engine (draft proposes ``spec_k`` tokens/round, target
+    verifies all k+1 positions in one batched forward with exact
+    rejection sampling), asserting the spec output **bit-identical** to
+    target-only and reporting acceptance rate, tokens/round and the
+    tok/s speedup.  The draft/target pair is the zero-extended
+    construction (``_zero_extended_target``), so acceptance is exactly
+    1.0 and the speedup is a pure engine-efficiency figure.  The stream
+    serves at batch 1 — the latency-bound regime speculative decoding
+    targets (the verify forward runs per slot, so at high batch
+    occupancy the saved decode steps are offset by per-slot verify
+    dispatches; at smoke shapes the crossover is ~batch 2).  Feeds the
+    ``speculative`` section of ``BENCH_serving.json`` (perf-smoke CI
+    tier)."""
+    import time
+    from dataclasses import replace
+    dcfg = smoke_variant(get(ARCHS[0]))
+    tcfg = replace(dcfg, n_layers=target_layers)
+    dparams = M.init_params(jax.random.PRNGKey(0), dcfg)
+    tparams = _zero_extended_target(dparams, dcfg, tcfg)
+
+    def stream():
+        rng = np.random.default_rng(3)
+        return [Request(prompt=rng.integers(1, dcfg.vocab_size,
+                                            size=rng.integers(4, 12)).tolist(),
+                        max_new_tokens=24, id=30_000 + i)
+                for i in range(3)]
+
+    def serve(**kw):
+        def once():
+            eng = GenerationEngine(tparams, tcfg, max_batch=1, max_len=64,
+                                   page_size=16, **kw)
+            reqs = stream()
+            for r in reqs:
+                eng.submit(r)
+            t0 = time.perf_counter()
+            eng.run()
+            dt = time.perf_counter() - t0
+            toks = sum(len(r.out_tokens) for r in reqs)
+            return [r.out_tokens for r in reqs], toks / max(dt, 1e-9), eng
+        once()                      # warm the jit caches
+        return once()
+
+    base_toks, base_tps, _ = serve()
+    spec_toks, spec_tps, eng = serve(draft_params=dparams, draft_cfg=dcfg,
+                                     spec_k=spec_k)
+    assert eng.spec_on, "speculative gating rejected the smoke pair"
+    assert spec_toks == base_toks, \
+        "speculative decoding deviated from target-only"
+    sc = eng.spec_counters()
+    n_tok = sum(len(t) for t in spec_toks)
+    out = {
+        "k": spec_k,
+        "draft_layers": dcfg.n_layers,
+        "target_layers": tcfg.n_layers,
+        "accept_rate": sc["spec_accept_rate"],
+        "rounds": sc["spec_rounds"],
+        "drafted": sc["spec_drafted"],
+        "accepted": sc["spec_accepted"],
+        "tokens_per_round": n_tok / max(sc["spec_rounds"], 1),
+        "target_tok_per_s": base_tps,
+        "spec_tok_per_s": spec_tps,
+        "speedup": spec_tps / max(base_tps, 1e-9),
+        "bit_identical_to_target_only": True,
+    }
+    assert out["accept_rate"] == 1.0, out["accept_rate"]
+    assert out["speedup"] >= 1.0, out
+    if verbose:
+        print(f"\nspeculative decoding ({ARCHS[0]} smoke: "
+              f"{dcfg.n_layers}-layer draft -> {tcfg.n_layers}-layer "
+              f"zero-extended target, k={spec_k}, batch 1):")
+        print(f"  target-only {base_tps:8.1f} tok/s")
+        print(f"  speculative {spec_tps:8.1f} tok/s "
+              f"({out['speedup']:.2f}x, accept rate "
+              f"{out['accept_rate']:.3f}, "
+              f"{out['tokens_per_round']:.2f} tokens/round)")
+        print("  spec tokens bit-identical to target-only: True")
+    return out
 
 
 # long-prompt/short-prompt mix for the chunked-prefill TTFT benchmark: the

@@ -465,6 +465,45 @@ class PagedKVCache:
             pages.append(pid)
         return cache
 
+    def rollback(self, cache: dict, slot: int, n_tokens: int):
+        """Truncate ``slot``'s timeline to ``n_tokens`` cache positions —
+        the speculative-verify rejection path: a verify forward appended
+        ``k + 1`` tokens' K/V (``page_write_chunk``) and the rejected
+        suffix must disappear again.
+
+        Pages past the boundary (beyond ``ceil(n_tokens / page_size)``,
+        floored at one page so the admission grant is never undercut)
+        return to the shard free list **in reverse-allocation order**:
+        :func:`ensure` pops from the tail of the descending free list,
+        so popping the slot's page list from its own tail and appending
+        each id back restores the free list — and with it every future
+        allocation decision — bit-exactly to the pre-verify state
+        (tests/test_speculative.py rollback property test).  Freed pages
+        are raw by construction: speculation allocates and rolls back
+        within one engine step, before cold compression or eviction can
+        touch the new pages.  Stale K/V between ``n_tokens`` and the old
+        timeline inside *kept* pages is overwritten by the slot's next
+        write at ``n_tokens`` and masked by ``kv_len`` until then — the
+        chunked-prefill stray-write discipline.  ``cur_len[slot]`` is
+        set to ``n_tokens``."""
+        cache = dict(cache)
+        pages = self._slot_pages.get(slot)
+        if pages is not None:
+            keep = min(max(-(-n_tokens // self.page_size), 1),
+                       self.pages_per_slot)
+            while len(pages) > keep:
+                pid = pages.pop()
+                if not (GARBAGE_PAGE < pid < self.n_pages):
+                    raise ValueError(
+                        f"rollback({slot}): page {pid} is not raw — only "
+                        f"pages allocated by the current verify window "
+                        f"can be rolled back")
+                cache["page_table"] = cache["page_table"].at[
+                    slot, len(pages)].set(GARBAGE_PAGE)
+                self._free[pid // self.pages_per_shard].append(pid)
+        cache["cur_len"] = cache["cur_len"].at[slot].set(n_tokens)
+        return cache
+
     def release(self, cache: dict, slot: int):
         """Free a finished slot's raw pages, cold-pool entries and swapped
         pages back to the free lists / swap store that own the ids."""

@@ -97,6 +97,22 @@ def main(argv=None):
                     help="prompt tokens spent on prefill per engine step "
                          "(bounds decode latency under long prompts); "
                          "default: one chunk.")
+    ap.add_argument("--draft", default=None, metavar="ARCH",
+                    help="speculative decoding: draft-model architecture "
+                         "from the registry (e.g. xlstm-350m drafting for "
+                         "qwen3-8b; --smoke applies to it too).  The "
+                         "draft proposes --spec-k tokens per round and "
+                         "the target verifies all k+1 positions in one "
+                         "batched forward with exact rejection sampling "
+                         "— output is bit-identical to target-only "
+                         "decoding under greedy and distribution-"
+                         "identical when sampling.  Needs --cache paged/"
+                         "paged-compressed, an all-attention target and "
+                         "whole-prompt prefill.")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per speculative round")
+    ap.add_argument("--draft-seed", type=int, default=1,
+                    help="PRNG seed for the synthesized draft weights")
     ap.add_argument("--mesh", default=None, metavar="D[xM]",
                     help="serve on a (data=D[, model=M]) device mesh, e.g. "
                          "'2' or '2x2'.  Needs D*M visible devices (on CPU "
@@ -179,6 +195,15 @@ def main(argv=None):
         prefill_chunk=args.prefill_chunk,
         prefill_budget=args.prefill_budget or None,
     )
+    if args.draft:
+        dcfg = get(args.draft)
+        if args.smoke:
+            dcfg = smoke_variant(dcfg)
+        dparams = M.init_params(jax.random.PRNGKey(args.draft_seed), dcfg)
+        cache_kw.update(draft_params=dparams, draft_cfg=dcfg,
+                        spec_k=args.spec_k)
+        print(f"[serve] speculative: draft {args.draft} "
+              f"({sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(dparams)) / 1e6:.2f}M params), k={args.spec_k}")
     tel = Telemetry(trace=args.trace_out is not None)
     mon = KVCacheMonitor(registry=tel.registry)
     eng = GenerationEngine(params_c, cfg, max_batch=args.max_batch,
@@ -222,6 +247,12 @@ def main(argv=None):
           f"({n_tok / max(dt, 1e-9):.1f} tok/s host wall-clock, "
           f"{eng.steps} decode steps, batch occupancy "
           f"{n_tok / max(eng.steps, 1):.2f})")
+    if eng.spec_on:
+        sc = eng.spec_counters()
+        print(f"[serve] speculative: {sc['spec_rounds']} verify rounds, "
+              f"accept rate {sc['spec_accept_rate']:.3f} "
+              f"({sc['spec_accepted']}/{sc['spec_drafted']} drafted), "
+              f"{n_tok / max(eng.steps, 1):.2f} tokens/step")
     ttft = tel.registry.get("serving_ttft_seconds")
     lat = tel.registry.get("serving_request_latency_seconds")
     if ttft is not None and ttft.count:

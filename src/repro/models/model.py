@@ -717,6 +717,43 @@ def prefill_chunk(params, cfg: ArchConfig, tokens, cache, slot, n_valid,
     new cache with ``cur_len[slot] += n_valid``).  Requires a paged cache
     and an architecture whose every layer is a paged kind ('attn'/'nope');
     the serving engine falls back to whole-prompt prefill otherwise."""
+    x, new_cache, n_valid = _chunk_stack(params, cfg, tokens, cache, slot,
+                                         n_valid, mesh)
+    last = jax.lax.dynamic_slice_in_dim(
+        x, jnp.maximum(n_valid - 1, 0), 1, axis=1)
+    logits = _unembed(params, cfg, last, jnp.dtype(cfg.dtype))
+    return logits, new_cache
+
+
+def verify_chunk(params, cfg: ArchConfig, tokens, cache, slot, n_valid,
+                 mesh=None):
+    """The speculative-decoding verify forward: :func:`prefill_chunk`'s
+    chunk program, but unembedding **every** chunk position.
+
+    tokens: (1, C) — the slot's last emitted token followed by the draft's
+    proposals (padded to the engine's ``spec_k + 1`` verify width; one
+    compilation serves every request/slot, like the prefill chunk).
+    Returns (logits (1, C, V), new cache): row ``i`` of the logits
+    conditions on the cache prefix plus ``tokens[:, :i+1]`` — the target
+    distribution that proposal ``i+1`` is accepted against
+    (``serving.spec.verify``), with row ``n_valid - 1`` scoring the bonus
+    token.  K/V for all ``n_valid`` tokens lands in the slot's pages and
+    ``cur_len[slot]`` advances by ``n_valid``; the engine rolls the
+    rejected suffix back afterwards (``PagedKVCache.rollback``) — the
+    same timeline-rollback discipline as the chunked-prefill masked
+    rows."""
+    x, new_cache, _ = _chunk_stack(params, cfg, tokens, cache, slot,
+                                   n_valid, mesh)
+    logits = _unembed(params, cfg, x, jnp.dtype(cfg.dtype))
+    return logits, new_cache
+
+
+def _chunk_stack(params, cfg: ArchConfig, tokens, cache, slot, n_valid,
+                 mesh):
+    """Shared chunk program of :func:`prefill_chunk` / :func:`verify_chunk`:
+    embed, run every layer in chunk mode (page-append + causal attention
+    over the gathered history), advance the slot's timeline.  Returns the
+    residual stream ``x`` (1, C, d) before unembedding."""
     dtype = jnp.dtype(cfg.dtype)
     cur_len = cache["cur_len"]
     start = cur_len[slot]
@@ -746,12 +783,10 @@ def prefill_chunk(params, cfg: ArchConfig, tokens, cache, slot, n_valid,
                                   cache["tail"][name], page_table, slot,
                                   start, n_valid)
         new_tail[name] = c
-    last = jax.lax.dynamic_slice_in_dim(
-        x, jnp.maximum(n_valid - 1, 0), 1, axis=1)
-    logits = _unembed(params, cfg, last, dtype)
-    return logits, {"units": new_units, "tail": new_tail,
-                    "cur_len": cur_len.at[slot].set(start + n_valid),
-                    "page_table": page_table}
+    new_cache = {"units": new_units, "tail": new_tail,
+                 "cur_len": cur_len.at[slot].set(start + n_valid),
+                 "page_table": page_table}
+    return x, new_cache, n_valid
 
 
 def _make_cross_kv(params, cfg, cross_ctx, dtype):

@@ -1,3 +1,4 @@
-from .sampler import filter_logits, greedy, sample_logits  # noqa: F401
+from .sampler import filter_logits, greedy, residual_probs, sample_logits  # noqa: F401
 from .engine import GenerationEngine, Request  # noqa: F401
 from .scheduler import Preempted, Scheduler  # noqa: F401
+from . import spec  # noqa: F401

@@ -88,6 +88,7 @@ from repro.kvcache.paged import PAGED_KINDS, restore_cold, strip_cold
 from repro.kvcache.swap import SwapExhausted
 from repro.models import model as M
 from repro.runtime import sharding as SH
+from . import spec as SPEC
 from .sampler import greedy, request_key, sample_logits
 from .scheduler import Preempted, Scheduler
 
@@ -113,6 +114,10 @@ _STEP_CACHE: dict = {}
 # and n_valid are traced, so this single entry serves every prompt
 # length — the whole point of the fixed chunk shape
 _CHUNK_CACHE: dict = {}
+# one jitted speculative verify per (cfg, mesh, max_len, k + 1): the
+# verify width is static, slot/n_valid are traced — one compilation
+# serves every request, acceptance length and timeline position
+_VERIFY_CACHE: dict = {}
 
 
 def _jitted_steps(cfg: ArchConfig, mesh, max_len: int):
@@ -132,6 +137,15 @@ def _jitted_chunk(cfg: ArchConfig, mesh, max_len: int, chunk: int):
             lambda p, t, c, s, n: M.prefill_chunk(p, cfg, t, c, s, n,
                                                   mesh=mesh))
     return _CHUNK_CACHE[key]
+
+
+def _jitted_verify(cfg: ArchConfig, mesh, max_len: int, width: int):
+    key = (cfg, mesh, max_len, width)
+    if key not in _VERIFY_CACHE:
+        _VERIFY_CACHE[key] = jax.jit(
+            lambda p, t, c, s, n: M.verify_chunk(p, cfg, t, c, s, n,
+                                                 mesh=mesh))
+    return _VERIFY_CACHE[key]
 
 
 def compile_count(fn) -> int:
@@ -185,7 +199,8 @@ class GenerationEngine:
                  n_cold_slots: int | None = None, kv_monitor=None,
                  swap_bytes: int | None = None, preemption: bool = True,
                  prefill_chunk: int = 0, prefill_budget: int | None = None,
-                 telemetry=None):
+                 draft_params=None, draft_cfg: ArchConfig | None = None,
+                 spec_k: int = 4, telemetry=None):
         """``mesh``: optional ``jax.sharding.Mesh``; the paged cache shards
         over its batch axes (see module docstring) and decode/prefill steps
         are jitted against it.  ``cache_mode``/``page_size``/``n_pages``/
@@ -206,6 +221,24 @@ class GenerationEngine:
         chunk).  Chunked prefill needs the paged cache, an architecture
         whose every layer pages, and a mesh without a model axis —
         otherwise the engine warns and prefills whole prompts.
+
+        ``draft_params``/``draft_cfg`` attach a **draft model** for
+        speculative decoding with exact rejection sampling
+        (``serving.spec``): each engine step the draft proposes
+        ``spec_k`` tokens per active slot (batched draft decode steps on
+        a paired monolithic draft cache, slot ``s`` of the draft paired
+        with target slot ``s``), the target verifies all ``spec_k + 1``
+        positions in one chunk-append forward (``models.model.
+        verify_chunk``), and rejected suffixes roll back timeline +
+        pages bit-exactly (``PagedKVCache.rollback``).  The output
+        distribution is provably identical to target-only decoding —
+        exactly token-identical under greedy — and accepted tokens are
+        schedule-, preemption- and k-invariant (keys fold from
+        ``(rng_seed, request.id, position)`` only).  Requires the paged
+        cache, an all-'attn'/'nope' target stack, no model mesh axis,
+        whole-prompt prefill (``prefill_chunk=0``) and a draft sharing
+        the target's vocabulary; otherwise the engine warns and serves
+        target-only.
 
         ``telemetry`` (``serving.telemetry.Telemetry``) turns on the
         observability subsystem: per-request lifecycle spans and
@@ -282,6 +315,41 @@ class GenerationEngine:
         self._prefill_order: list[int] = []     # admission order (FIFO)
         self._stalled_ids: set = set()          # self-preempted this step
         self.n_chunks = self.n_chunk_tokens = self.n_interleaved_steps = 0
+        # speculative decoding: gate to configs the verify path supports
+        # (same family of constraints as chunked prefill — the verify
+        # forward is a chunk append), plus a vocabulary-compatible draft
+        self.spec_on = False
+        self.spec_k = max(int(spec_k), 1)
+        if draft_params is not None and draft_cfg is not None:
+            n_model = 1
+            if mesh is not None and "model" in mesh.axis_names:
+                n_model = mesh.shape["model"]
+            all_paged = all(cfg.layer_kind(i) in PAGED_KINDS
+                            for i in range(cfg.n_layers))
+            if (self.cache_mode != "paged" or not all_paged
+                    or cfg.encoder_decoder or draft_cfg.encoder_decoder
+                    or n_model > 1 or self.prefill_chunk
+                    or draft_cfg.vocab_size != cfg.vocab_size):
+                warnings.warn(
+                    "speculative decoding needs the paged cache, an "
+                    "all-'attn'/'nope' target stack, no model mesh axis, "
+                    "whole-prompt prefill and a same-vocabulary draft; "
+                    "serving target-only", stacklevel=2)
+            else:
+                self.spec_on = True
+                self.draft_params, self.draft_cfg = draft_params, draft_cfg
+                self._draft_decode, self._draft_prefill = _jitted_steps(
+                    draft_cfg, mesh, max_len)
+                self._verify = _jitted_verify(cfg, mesh, max_len,
+                                              self.spec_k + 1)
+                # the paired draft cache: always monolithic (a small
+                # draft needs no paging, and rejection rollback is a
+                # per-slot snapshot re-splice — works for recurrent
+                # drafts too, where no positional rollback exists)
+                self.draft_cache = M.init_cache(
+                    draft_cfg, max_batch, max_len,
+                    dtype=jnp.dtype(draft_cfg.dtype), per_slot=True)
+        self.n_spec_rounds = self.n_spec_drafted = self.n_spec_accepted = 0
         self.scheduler = Scheduler(paged=self.paged, preemption=preemption,
                                    chunk_tokens=chunk)
         self._host_len = [0] * max_batch        # next write position per slot
@@ -385,6 +453,13 @@ class GenerationEngine:
                                           len(req.prompt))
         else:
             self.cache = splice_fragment(self.cache, frag, slot)
+        if self.spec_on:
+            # spec-aware prefill: the paired draft consumes the prompt
+            # too (its logits are unused — the first token is sampled
+            # from the *target* prefill, identical to target-only)
+            _, dfrag = self._draft_prefill(self.draft_params, toks)
+            self.draft_cache = splice_fragment(self.draft_cache, dfrag,
+                                               slot)
         self._host_len[slot] = len(req.prompt)
         tok = self._sample_one(logits, req)
         req.out_tokens.append(int(tok))
@@ -443,6 +518,10 @@ class GenerationEngine:
         if st.state:
             self.cache = self.paged.restore_slot_state(self.cache, slot,
                                                        st.state)
+        if self.spec_on and st.draft_state is not None:
+            # reinstall the paired draft-cache row (bit-exact: the state
+            # never left its original bit pattern on the host)
+            self._draft_restore(slot, st.draft_state)
         self.cache = dict(self.cache)
         self.cache["cur_len"] = self.cache["cur_len"].at[slot].set(
             st.host_len)
@@ -497,7 +576,9 @@ class GenerationEngine:
         st = Preempted(req=req, pages=pages, skip=skip, state=state,
                        host_len=self._host_len[slot],
                        last_tok=int(self.last_tok[slot, 0]),
-                       prefill_pos=self._prefill_pos.get(slot))
+                       prefill_pos=self._prefill_pos.get(slot),
+                       draft_state=(self._draft_snapshot(slot)
+                                    if self.spec_on else None))
         if slot in self._prefill_pos:       # preempted mid-prefill
             del self._prefill_pos[slot]
             self._prefill_order.remove(slot)
@@ -573,6 +654,233 @@ class GenerationEngine:
             return greedy(logits)[0, 0]
         key = request_key(self.rng0, req.id, len(req.out_tokens))
         return sample_logits(logits, key, temperature=req.temperature)[0, 0]
+
+    def _finish(self, s: int, req: Request):
+        """Retire a finished request: clear the slot, publish telemetry,
+        release its pages."""
+        req.done = True
+        self.slots[s] = None
+        tel = self.tel
+        if tel is not None:
+            tel.registry.counter("serving_requests_finished_total").inc()
+            sub = self._submit_t.pop(req.id, None)
+            if sub is not None:
+                tel.registry.histogram(
+                    "serving_request_latency_seconds").observe(
+                        time.perf_counter() - sub)
+            if tel.requests is not None:
+                tel.requests.finish(req.id,
+                                    args={"tokens": len(req.out_tokens)})
+        if self.paged is not None:
+            self.cache = self.paged.release(self.cache, s)
+
+    # -- speculative decoding ----------------------------------------------
+
+    def _draft_leaf_axis(self, path):
+        """(names, batch axis) of a draft-cache leaf from its pytree path
+        — the same dispatch as :func:`splice_fragment`."""
+        names = [str(getattr(k, "key", getattr(k, "idx", k)))
+                 for k in path]
+        return names, (1 if "units" in names else 0)
+
+    def _draft_snapshot(self, slot: int) -> list:
+        """Host copies of every draft-cache leaf's ``slot`` slice — the
+        paired draft row stashed into ``Preempted.draft_state`` when the
+        target slot is preempted (preempting one preempts both)."""
+        flat, _ = jax.tree_util.tree_flatten_with_path(self.draft_cache)
+        out = []
+        for path, leaf in flat:
+            names, axis = self._draft_leaf_axis(path)
+            if "cur_len" in names:
+                out.append(np.asarray(leaf[slot]))
+            else:
+                out.append(np.asarray(jax.lax.dynamic_slice_in_dim(
+                    leaf, slot, 1, axis=axis)))
+        return out
+
+    def _draft_restore(self, slot: int, snap: list):
+        """Inverse of :func:`_draft_snapshot` (bit-exact: the row never
+        left its original dtype/bit pattern on the host)."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            self.draft_cache)
+        leaves = []
+        for (path, leaf), fr in zip(flat, snap):
+            names, _ = self._draft_leaf_axis(path)
+            leaves.append(_splice(leaf, jnp.asarray(fr), slot, names))
+        self.draft_cache = jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def _draft_rollback(self, slot: int, snap_cache):
+        """Re-splice ``slot``'s draft row from a retained round snapshot
+        — the draft-side rejection rollback.  Snapshots are the
+        (immutable) cache pytrees returned by each draft step, so this
+        is a device-side slice/update per leaf, no host round trip; it
+        also restores the recurrent state of non-positional drafts
+        (slstm/mlstm), which no ``cur_len`` rollback could."""
+        flat_cur, treedef = jax.tree_util.tree_flatten_with_path(
+            self.draft_cache)
+        flat_snap = jax.tree_util.tree_flatten(snap_cache)[0]
+        leaves = []
+        for (path, cur), sv in zip(flat_cur, flat_snap):
+            names, axis = self._draft_leaf_axis(path)
+            if "cur_len" in names:
+                leaves.append(cur.at[slot].set(sv[slot]))
+            else:
+                fr = jax.lax.dynamic_slice_in_dim(sv, slot, 1, axis=axis)
+                leaves.append(jax.lax.dynamic_update_slice_in_dim(
+                    cur, fr, slot, axis=axis))
+        self.draft_cache = jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def _spec_round(self, active):
+        """One speculative round for every decode-phase slot: ``k``
+        batched draft proposal steps (+1 state-advance step, snapshots
+        retained), one verify forward per slot appending ``k + 1``
+        tokens' K/V (``models.model.verify_chunk``), exact rejection
+        sampling (``serving.spec.verify``), then timeline + page +
+        draft-state rollback of each rejected suffix.  Emits 1..k+1
+        tokens per slot; the emitted stream is distribution-identical
+        to target-only decoding (token-identical under greedy).
+
+        Draft snapshot indexing: ``snaps[j]`` is the draft cache after
+        ``j`` steps, i.e. having consumed proposals ``1..j-1``.  A slot
+        that emits ``j`` tokens needs exactly ``snaps[j]`` — its new
+        last token is the ``j``-th emission, which the draft consumes
+        at the start of the *next* round."""
+        k, tel = self.spec_k, self.tel
+        t0 = time.perf_counter()
+        # grow every slot's page list to cover its whole verify window
+        # *before* drafting: ensure-with-pressure can preempt another
+        # active slot, and a victim's paired draft row must be stashed
+        # in its round-start state, not mid-round advanced
+        windows = {}
+        for s in active:
+            if self.slots[s] is None:
+                continue            # preempted by an earlier slot's ensure
+            n_cache = self._host_len[s]
+            k_eff = max(min(k, self.max_len - 1 - n_cache), 0)
+            # speculation never preempts a neighbour just to draft
+            # deeper: under page pressure the window shrinks, and only
+            # the mandatory +1 write (k_eff == 0: exactly the
+            # target-only step's allocation) applies preemption pressure
+            while k_eff:
+                try:
+                    self.cache = self.paged.ensure(self.cache, s,
+                                                   n_cache + k_eff)
+                    break
+                except OutOfPages:
+                    k_eff -= 1
+            if not k_eff:
+                self._ensure_with_pressure(s)
+            windows[s] = (n_cache, k_eff)
+        active = [s for s in active if self.slots[s] is not None]
+        if not active:
+            return
+        snaps = [self.draft_cache]
+        q_rows = []                     # draft logits per proposal (B, 1, V)
+        props = np.zeros((self.max_batch, k), np.int64)
+        tok = self.last_tok
+        for j in range(1, k + 2):
+            logits, dc = self._draft_decode(self.draft_params, tok,
+                                            self.draft_cache)
+            self.draft_cache = dc
+            snaps.append(dc)
+            if j > k:
+                break                   # final step only advances state
+            q_rows.append(logits)
+            nxt = np.asarray(greedy(logits)).copy()           # (B, 1)
+            # sampled rows propose with the plain-decode rule and key
+            # (serving.spec module docstring) — same batched vmapped
+            # draw as the target-only step loop
+            samp = [s for s in active if self.slots[s].temperature > 0]
+            if samp:
+                rows = logits[jnp.asarray(samp)]
+                ids = jnp.asarray([self.slots[s].id for s in samp],
+                                  jnp.int32)
+                pos = jnp.asarray(
+                    [len(self.slots[s].out_tokens) + j - 1 for s in samp],
+                    jnp.int32)
+                temps = jnp.asarray(
+                    [self.slots[s].temperature for s in samp], jnp.float32)
+
+                def draw(row, i, p, t):
+                    key = request_key(self.rng0, i, p)
+                    return sample_logits(row[None] / t, key,
+                                         temperature=1.0)[0, 0]
+
+                got = np.asarray(jax.vmap(draw)(rows, ids, pos, temps))
+                for s, g in zip(samp, got.tolist()):
+                    nxt[s, 0] = g
+            props[:, j - 1] = nxt[:, 0]
+            tok = jnp.asarray(nxt.astype(np.int32))
+        width = k + 1
+        for s in active:
+            req = self.slots[s]
+            # the window clamps to the slot's remaining timeline (the
+            # verify writes positions n_cache .. n_cache + k_eff)
+            n_cache, k_eff = windows[s]
+            toks = np.zeros((1, width), np.int32)
+            toks[0, 0] = int(self.last_tok[s, 0])
+            toks[0, 1:1 + k_eff] = props[s, :k_eff]
+            cache_in, stash = self._maybe_strip()
+            logits, new_cache = self._verify(self.params,
+                                             jnp.asarray(toks), cache_in,
+                                             s, k_eff + 1)
+            self.cache = (restore_cold(new_cache, stash) if stash
+                          else new_cache)
+            p_log = np.asarray(logits[0], np.float32)[: k_eff + 1]
+            q_log = (np.stack([np.asarray(q_rows[j][s, 0])
+                               for j in range(k_eff)])
+                     if k_eff else
+                     np.zeros((0, p_log.shape[-1]), np.float32))
+            out, m = SPEC.verify(p_log, q_log, props[s, :k_eff].tolist(),
+                                 rng0=self.rng0, req_id=req.id,
+                                 pos0=len(req.out_tokens),
+                                 temperature=req.temperature)
+            # clip to the request's budget and the window (both >= 1:
+            # a finished request never re-enters the active list)
+            allow = min(req.max_new_tokens - len(req.out_tokens),
+                        self.max_len - len(req.prompt)
+                        - len(req.out_tokens))
+            emit = out[: max(allow, 1)]
+            j_emit = len(emit)
+            new_len = n_cache + j_emit
+            self.cache = self.paged.rollback(self.cache, s, new_len)
+            self._host_len[s] = new_len
+            if j_emit <= k:
+                self._draft_rollback(s, snaps[j_emit])
+            req.out_tokens.extend(int(t) for t in emit)
+            self.last_tok = self.last_tok.at[s, 0].set(int(emit[-1]))
+            self.n_spec_rounds += 1
+            self.n_spec_drafted += k_eff
+            self.n_spec_accepted += m
+            if tel is not None:
+                tel.registry.counter("spec_drafted_total").inc(k_eff)
+                tel.registry.counter("spec_accepted_total").inc(m)
+                tel.registry.histogram("spec_accept_rate").observe(
+                    m / k_eff if k_eff else 0.0)
+                tel.registry.counter(
+                    "serving_tokens_generated_total").inc(j_emit)
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or len(req.prompt) + len(req.out_tokens)
+                    >= self.max_len):
+                self._finish(s, req)
+        if tel is not None:
+            now = time.perf_counter()
+            tel.registry.histogram("serving_decode_step_seconds").observe(
+                now - t0)
+            if tel.tracer is not None:
+                tel.tracer.complete("engine", "spec_round", "engine", t0,
+                                    now, args={"step": self.steps,
+                                               "active": len(active)})
+            self._note_compiles()
+
+    def spec_counters(self) -> dict:
+        """Host-side speculative-decoding counters (mirrored into the
+        telemetry registry as ``spec_*`` when telemetry is on)."""
+        return {"spec_rounds": self.n_spec_rounds,
+                "spec_drafted": self.n_spec_drafted,
+                "spec_accepted": self.n_spec_accepted,
+                "spec_accept_rate": (self.n_spec_accepted
+                                     / max(self.n_spec_drafted, 1))}
 
     # -- chunked prefill ---------------------------------------------------
 
@@ -697,13 +1005,15 @@ class GenerationEngine:
 
     # -- stepping ----------------------------------------------------------
 
-    def _ensure_with_pressure(self, slot: int):
-        """Grow ``slot``'s page list for this step's write; on page
-        pressure, preempt victims on the same shard until it fits."""
+    def _ensure_with_pressure(self, slot: int, pos: int | None = None):
+        """Grow ``slot``'s page list to cover a write at ``pos``
+        (default: this step's single decode write); on page pressure,
+        preempt victims on the same shard until it fits."""
+        if pos is None:
+            pos = self._host_len[slot]
         while True:
             try:
-                self.cache = self.paged.ensure(self.cache, slot,
-                                               self._host_len[slot])
+                self.cache = self.paged.ensure(self.cache, slot, pos)
                 return
             except OutOfPages:
                 victim = self.scheduler.victim(
@@ -744,6 +1054,20 @@ class GenerationEngine:
             for s in active:
                 if self.paged.has_swapped(s):
                     self.cache = self.paged.fault(self.cache, s)
+        if self.spec_on:
+            # speculative mode replaces the single decode step with a
+            # draft/verify round (1..k+1 tokens per slot); chunked
+            # prefill is gated off, so no mid-prefill rows exist here
+            self._spec_round(active)
+            self.steps += 1
+            if self.paged is not None and self.paged.compress:
+                for s in range(self.max_batch):
+                    if self.slots[s] is not None:
+                        self.cache = self.paged.compress_cold_pages(
+                            self.cache, s, self._host_len[s])
+            self._record_monitor()
+            self._sample_gauges()
+            return True
         # while nothing is cold, run the decode variant without the cold
         # pool (its in-graph entropy decode would be pure waste)
         t_dec = time.perf_counter()
@@ -816,21 +1140,7 @@ class GenerationEngine:
             self._host_len[s] += 1
             if len(req.out_tokens) >= req.max_new_tokens or (
                     len(req.prompt) + len(req.out_tokens) >= self.max_len):
-                req.done = True
-                self.slots[s] = None
-                if tel is not None:
-                    tel.registry.counter(
-                        "serving_requests_finished_total").inc()
-                    sub = self._submit_t.pop(req.id, None)
-                    if sub is not None:
-                        tel.registry.histogram(
-                            "serving_request_latency_seconds").observe(
-                                time.perf_counter() - sub)
-                    if tel.requests is not None:
-                        tel.requests.finish(
-                            req.id, args={"tokens": len(req.out_tokens)})
-                if self.paged is not None:
-                    self.cache = self.paged.release(self.cache, s)
+                self._finish(s, req)
         if self.paged is not None and self.paged.compress:
             for s in range(self.max_batch):
                 if self.slots[s] is not None:

@@ -52,6 +52,27 @@ def filter_logits(x, *, top_k: int = 0, top_p: float = 0.0):
     return x
 
 
+def residual_probs(p, q):
+    """The exact rejection-sampling residual ``max(0, p - q) / Z``.
+
+    ``p``/``q`` are probability vectors (..., V) — the target and draft
+    distributions at one position.  ``Z = sum(max(0, p - q))`` equals
+    ``1 - sum(min(p, q))``, which is exactly the total rejection
+    probability, so sampling the residual after a rejection makes the
+    marginal next-token distribution equal ``p`` identically (the
+    speculative-decoding identity; proof in docs/ARCHITECTURE.md).
+
+    Edge cases (tests/test_speculative.py): ``p == q`` gives ``Z == 0``
+    — a rejection is then impossible (the acceptance probability
+    ``min(1, p/q)`` is 1 everywhere q has mass), so the residual is
+    unreachable; this returns ``p`` to keep the function total.  A
+    one-hot ``p`` concentrates the residual on its hot token; a
+    zero-overlap ``q`` leaves the residual equal to ``p``."""
+    r = jnp.maximum(p - q, 0.0)
+    z = jnp.sum(r, axis=-1, keepdims=True)
+    return jnp.where(z > 0, r / jnp.where(z > 0, z, 1.0), p)
+
+
 def sample_logits(logits, rng, *, temperature: float = 1.0,
                   top_k: int = 0, top_p: float = 0.0):
     """Temperature / top-k / top-p sampling.  logits (B, 1, V) -> (B, 1).

@@ -26,6 +26,19 @@ and this module supplies the policy layer:
 
 The scheduler is pure host-side policy: it owns the queues and victim
 choice; the engine owns execution (prefill, evict/fault, splicing).
+
+**Draft/target slot pairing (speculative decoding).**  With a draft
+model attached (``engine.GenerationEngine(draft_params=...)``), every
+target slot ``s`` is paired with row ``s`` of the draft cache — one
+request owns both, so admission, victim choice and preemption stay
+single-keyed on the target slot and *preempting one preempts both* by
+construction: ``_preempt`` snapshots the draft row into
+:attr:`Preempted.draft_state` alongside the target's swapped pages, and
+resume reinstalls it before the next verify round.  The draft thus rides
+the swap tier's host side (its state is host-stashed bytes, like the
+hybrid-arch recurrent state in :attr:`Preempted.state`) without its own
+page accounting — the draft cache is monolithic and preallocated, so it
+never contributes page pressure and the admission math is unchanged.
 """
 from __future__ import annotations
 
@@ -52,6 +65,12 @@ class Preempted:
     # ^ non-paged per-slot cache state (local-attention rings, recurrent
     #   states of hybrid archs) — PagedKVCache.snapshot_slot_state
     prefill_pos: int | None = None   # prompt tokens consumed (mid-prefill)
+    draft_state: list | None = None
+    # ^ the paired draft-model cache row (speculative decoding): host
+    #   copies of every draft-cache leaf's slot slice, taken by
+    #   engine._draft_snapshot at preemption and re-spliced on resume —
+    #   preempting the target slot preempts its draft by construction
+    #   (module docstring, "Draft/target slot pairing")
 
     @property
     def priority(self) -> int:

@@ -1,0 +1,134 @@
+"""Exact rejection sampling for speculative decoding.
+
+A draft model proposes ``k`` tokens; the target model scores all ``k+1``
+positions in one batched verify forward (``models.model.verify_chunk``),
+and this module decides which proposals survive.  The acceptance rule is
+the classic speculative-sampling identity (Leviathan et al. / Chen et
+al.): at each position, with target distribution ``p`` and draft
+distribution ``q``, a proposal ``t ~ q`` is accepted with probability
+``min(1, p(t)/q(t))``; on rejection the position's token is redrawn from
+the residual ``max(0, p - q) / Z`` (``sampler.residual_probs``).  The
+marginal is exactly ``p``::
+
+    P(token = t) = q(t) min(1, p(t)/q(t)) + P(reject) * (p-q)+(t)/Z
+                 = min(p, q)(t) + Z * (p-q)+(t)/Z        [P(reject) = Z]
+                 = min(p, q)(t) + max(0, p(t) - q(t)) = p(t)
+
+so speculative decoding is **distribution-identical** to target-only
+decoding — and **token-identical** under greedy, where acceptance is the
+exact argmax comparison and every emitted token is an argmax of the
+target logits (tests/test_speculative.py pins both).
+
+Key discipline (the schedule-invariance contract from PR 3/4): every
+draw at absolute token position ``pos`` derives from
+``sampler.request_key(rng0, req_id, pos)`` and nothing else —
+
+  * the **draft proposal** for ``pos`` uses the *plain-decode* rule and
+    key (``sample_logits(q/T, request_key(...pos))``), so when draft and
+    target agree (``q == p``) speculative output is bit-identical to
+    plain decode at any temperature;
+  * the **acceptance uniform** folds in :data:`ACCEPT_DRAW`;
+  * the **residual resample** folds in :data:`RESIDUAL_DRAW`;
+  * the **bonus token** after a fully accepted window uses the
+    plain-decode rule and key on the target logits.
+
+None of these depend on ``k``, on where ``pos`` falls inside a verify
+window, or on preemption/resume — accepted tokens are schedule-,
+preemption- and k-invariant (tests/test_sampler.py regression).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .sampler import request_key, residual_probs, sample_logits
+
+# fold-in tags separating the three per-position draw streams: the base
+# position key is the proposal/plain-decode draw; ACCEPT_DRAW is the
+# acceptance uniform; RESIDUAL_DRAW is the rejection resample
+ACCEPT_DRAW = 1
+RESIDUAL_DRAW = 2
+
+
+def accept_key(rng0, req_id, position):
+    """PRNG key of the acceptance uniform at ``position``."""
+    return jax.random.fold_in(request_key(rng0, req_id, position),
+                              ACCEPT_DRAW)
+
+
+def residual_key(rng0, req_id, position):
+    """PRNG key of the residual resample at ``position``."""
+    return jax.random.fold_in(request_key(rng0, req_id, position),
+                              RESIDUAL_DRAW)
+
+
+def propose(q_logits, rng0, req_id, position, temperature: float) -> int:
+    """Draw one draft proposal from ``q_logits`` (1, 1, V) for absolute
+    token ``position`` — exactly the plain-decode rule and key, so a
+    draft that agrees with the target reproduces the plain-decode token
+    stream bit for bit."""
+    if temperature <= 0:
+        return int(jnp.argmax(q_logits[0, -1]))
+    key = request_key(rng0, req_id, position)
+    return int(sample_logits(q_logits / temperature, key,
+                             temperature=1.0)[0, 0])
+
+
+def verify(p_logits, q_logits, proposals, *, rng0, req_id, pos0: int,
+           temperature: float):
+    """Exact rejection sampling over one verify window.
+
+    Args:
+      p_logits: (n+1, V) target logits; row ``i`` conditions on the
+        accepted history plus ``proposals[:i]`` and scores the token at
+        absolute position ``pos0 + i``.
+      q_logits: (n, V) draft logits; row ``i`` is the distribution
+        ``proposals[i]`` was drawn from.
+      proposals: the n drafted tokens (candidates for ``pos0 .. pos0+n-1``).
+      rng0/req_id: the engine's seed key and the request id (the fold-in
+        key material — see module docstring).
+      pos0: absolute position of the first proposal.
+      temperature: the request's temperature; ``<= 0`` is the exact
+        greedy path (argmax comparisons, no randomness).
+
+    Returns ``(tokens, n_accepted)``: the accepted proposal prefix plus
+    exactly one more token — the residual resample at the first rejected
+    position, or the bonus token from the target's last row after a
+    fully accepted window.  ``len(tokens) == n_accepted + 1`` always.
+    """
+    n = len(proposals)
+    p_logits = np.asarray(p_logits, np.float32)
+    if temperature <= 0:
+        out = []
+        for i, t in enumerate(proposals):
+            tgt = int(np.argmax(p_logits[i]))
+            if int(t) != tgt:
+                return out + [tgt], i
+            out.append(int(t))
+        return out + [int(np.argmax(p_logits[n]))], n
+
+    p = np.asarray(jax.nn.softmax(
+        jnp.asarray(p_logits) / temperature, axis=-1))
+    if n:
+        q_logits = np.asarray(q_logits, np.float32).reshape(n, -1)
+        q = np.asarray(jax.nn.softmax(
+            jnp.asarray(q_logits) / temperature, axis=-1))
+    out = []
+    for i, t in enumerate(proposals):
+        t = int(t)
+        u = float(jax.random.uniform(accept_key(rng0, req_id, pos0 + i)))
+        # accept iff u < min(1, p(t)/q(t))  <=>  u * q(t) < p(t)
+        if u * q[i, t] < p[i, t]:
+            out.append(t)
+            continue
+        r = residual_probs(jnp.asarray(p[i]), jnp.asarray(q[i]))
+        tok = int(jax.random.categorical(
+            residual_key(rng0, req_id, pos0 + i), jnp.log(r)))
+        return out + [tok], i
+    # fully accepted window: the bonus token draws from the target's
+    # last row with the plain-decode rule and key
+    key = request_key(rng0, req_id, pos0 + n)
+    bonus = int(sample_logits(jnp.asarray(p_logits[n])[None, None, :]
+                              / temperature, key, temperature=1.0)[0, 0])
+    return out + [bonus], n

@@ -132,3 +132,47 @@ def test_greedy_shape_and_dtype():
     logits = _rand_logits(5)[:, None, :]
     g = greedy(logits)
     assert g.shape == (2, 1) and g.dtype == jnp.int32
+
+
+def test_request_key_invariant_across_spec_paths():
+    """Key-invariance regression (ISSUE 7): the draw at absolute token
+    position ``pos`` is a pure function of ``(rng0, request id, pos)``
+    and is **the same draw** on every path that can emit that position —
+    plain decode, a draft proposal (draft-accept path), and the bonus
+    token after a fully accepted verify window.  The accept/residual
+    streams are tagged fold-ins that never alias the proposal stream."""
+    from repro.serving import spec
+    from repro.serving.sampler import request_key
+
+    rng0 = jax.random.PRNGKey(3)
+    V, T, rid, pos = 13, 0.7, 42, 11
+    logits = _rand_logits(7, B=1, V=V)[0]
+    row = jnp.asarray(logits)[None, None, :]
+    plain = int(sample_logits(row / T, request_key(rng0, rid, pos),
+                              temperature=1.0)[0, 0])
+    # draft proposal at the same position is the identical draw
+    assert spec.propose(row, rng0, rid, pos, temperature=T) == plain
+    # bonus draw of an empty verify window (k_eff == 0) is the plain step
+    out, m = spec.verify(np.asarray(logits)[None],
+                         np.zeros((0, V), np.float32), [],
+                         rng0=rng0, req_id=rid, pos0=pos, temperature=T)
+    assert m == 0 and out == [plain]
+    # a self-agreeing draft accepts its proposal: the emitted token on
+    # the draft-accept path is again the same plain-decode draw
+    out, m = spec.verify(np.stack([logits, logits]),
+                         np.asarray(logits)[None], [plain],
+                         rng0=rng0, req_id=rid, pos0=pos, temperature=T)
+    assert m == 1 and out[0] == plain
+    # purity: recomputation is bit-identical; streams never alias
+    k = np.asarray(request_key(rng0, rid, pos))
+    np.testing.assert_array_equal(k, np.asarray(request_key(rng0, rid,
+                                                            pos)))
+    ka = np.asarray(spec.accept_key(rng0, rid, pos))
+    kr = np.asarray(spec.residual_key(rng0, rid, pos))
+    assert not np.array_equal(ka, k) and not np.array_equal(kr, k)
+    assert not np.array_equal(ka, kr)
+    # distinct (id, pos) give distinct base keys
+    assert not np.array_equal(k, np.asarray(request_key(rng0, rid,
+                                                        pos + 1)))
+    assert not np.array_equal(k, np.asarray(request_key(rng0, rid + 1,
+                                                        pos)))

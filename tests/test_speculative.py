@@ -1,0 +1,443 @@
+"""Speculative decoding (ISSUE 7): differential + statistical identity.
+
+Three proof layers for the draft/verify engine path:
+
+  * **differential anchor** — greedy speculative output must be
+    **token-identical** to the target-only engine for k in {1, 2, 4, 8},
+    including under forced preemption/resume and (slow, subprocess) on a
+    2-device data mesh; a draft that equals the target must reproduce
+    the plain-decode *sampled* stream bit for bit at any temperature
+    (the key-discipline contract of ``serving.spec``);
+  * **statistical identity** — the rejection-sampling marginal over many
+    seeded trials matches the analytic target distribution (chi-square,
+    fixed seeds, and must *not* match the draft distribution — the
+    test's power check); ``residual_probs`` is exact on hand-built p/q;
+  * **rollback property** — hypothesis over (prompt length, page size,
+    window size, accepted-prefix length): rejecting a suffix that
+    straddles a page boundary restores ``cur_len``, the page table and
+    the per-shard free lists bit-exactly to an allocator that never saw
+    the window.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from conftest import run_subprocess
+
+from repro.configs import get, smoke_variant
+from repro.kvcache import PagedKVCache
+from repro.models import model as M
+from repro.serving import GenerationEngine, Request, spec
+from repro.serving.sampler import request_key, residual_probs, sample_logits
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # tier-1 may run without hypothesis
+    given = None
+
+
+def _tcfg():
+    return smoke_variant(get("qwen3-8b"))
+
+
+def _dcfg():
+    return smoke_variant(get("xlstm-350m"))   # recurrent draft, same vocab
+
+
+def _params(cfg, seed):
+    return M.init_params(jax.random.PRNGKey(seed), cfg)
+
+
+def _stream(temps=(0.0,)):
+    return [Request(prompt=[i + 1] * (4 + 2 * i), max_new_tokens=5 + i,
+                    temperature=temps[i % len(temps)], id=40_000 + i)
+            for i in range(4)]
+
+
+def _serve(params, cfg, reqs, **kw):
+    eng = GenerationEngine(params, cfg, max_batch=3, max_len=64, **kw)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done for r in reqs)
+    return [r.out_tokens for r in reqs], eng
+
+
+# --------------------------------------------------------------------------
+# differential anchor: greedy spec == target-only, k-invariant
+# --------------------------------------------------------------------------
+
+def test_greedy_spec_identical_to_target_only_all_k():
+    cfg, dcfg = _tcfg(), _dcfg()
+    params, dparams = _params(cfg, 0), _params(dcfg, 1)
+    base, _ = _serve(params, cfg, _stream())
+    for k in (1, 2, 4, 8):
+        got, eng = _serve(params, cfg, _stream(),
+                          draft_params=dparams, draft_cfg=dcfg, spec_k=k)
+        assert eng.spec_on
+        assert got == base, k
+        sc = eng.spec_counters()
+        assert sc["spec_drafted"] >= sc["spec_rounds"] > 0
+        # every round emits >= 1 token even when all proposals reject
+        assert sum(len(t) for t in got) >= sc["spec_rounds"]
+
+
+def test_self_draft_sampled_identical_to_plain_decode():
+    """draft == target makes every proposal's distribution equal the
+    target's, so acceptance is 1.0 and — because proposals/bonus use the
+    plain-decode rule and key — the *sampled* output is bit-identical to
+    the non-speculative engine at any temperature."""
+    cfg = _tcfg()
+    params = _params(cfg, 0)
+    base, _ = _serve(params, cfg, _stream(temps=(0.9, 0.0, 0.6)))
+    for k in (1, 3):
+        got, eng = _serve(params, cfg, _stream(temps=(0.9, 0.0, 0.6)),
+                          draft_params=params, draft_cfg=cfg, spec_k=k)
+        assert eng.spec_on
+        assert got == base, k
+        sc = eng.spec_counters()
+        assert sc["spec_accept_rate"] == 1.0, sc
+
+
+def test_spec_under_forced_preemption_and_pressure():
+    """Page pressure preempts draft/target pairs mid-stream, plus one
+    explicit mid-generation ``_preempt``; the resumed pair (target pages
+    faulted back, draft row re-spliced from the host stash) must keep
+    the greedy stream identical to target-only."""
+    cfg, dcfg = _tcfg(), _dcfg()
+    params, dparams = _params(cfg, 0), _params(dcfg, 1)
+
+    def reqs():
+        return [Request(prompt=[i + 1] * (6 + 3 * i), max_new_tokens=10 + i,
+                        priority=i % 2, id=41_000 + i) for i in range(6)]
+
+    def serve(spec_on, **kw):
+        eng = GenerationEngine(
+            params, cfg, max_batch=2, max_len=64, page_size=4, n_pages=10,
+            swap_bytes=-1,
+            **(dict(draft_params=dparams, draft_cfg=dcfg, spec_k=4)
+               if spec_on else {}), **kw)
+        rs = reqs()
+        for r in rs:
+            eng.submit(r)
+        for _ in range(4):
+            eng.step()
+        occupied = [s for s in range(eng.max_batch)
+                    if eng.slots[s] is not None]
+        if occupied:
+            assert eng._preempt(occupied[0])    # force a swap round trip
+        eng.run()
+        assert all(r.done for r in rs)
+        return [r.out_tokens for r in rs], eng
+
+    base, _ = serve(False)
+    got, eng = serve(True)
+    assert eng.spec_on
+    assert eng.scheduler.n_preempted > 0 and eng.scheduler.n_resumed > 0
+    assert got == base
+
+
+def test_spec_gating_falls_back_to_target_only():
+    """Unsupported combinations warn and serve target-only instead of
+    failing: monolithic cache, chunked prefill, vocab mismatch."""
+    from dataclasses import replace
+    cfg, dcfg = _tcfg(), _dcfg()
+    params, dparams = _params(cfg, 0), _params(dcfg, 1)
+    for kw in (dict(cache_mode="monolithic"), dict(prefill_chunk=16)):
+        with pytest.warns(UserWarning, match="speculative"):
+            eng = GenerationEngine(params, cfg, max_batch=2, max_len=64,
+                                   draft_params=dparams, draft_cfg=dcfg,
+                                   **kw)
+        assert not eng.spec_on
+    bad = replace(dcfg, vocab_size=dcfg.vocab_size * 2)
+    with pytest.warns(UserWarning, match="speculative"):
+        eng = GenerationEngine(params, cfg, max_batch=2, max_len=64,
+                               draft_params=_params(bad, 1), draft_cfg=bad)
+    assert not eng.spec_on
+    r = Request(prompt=[1, 2, 3], max_new_tokens=4, id=42_000)
+    eng.submit(r)
+    eng.run()
+    assert r.done and len(r.out_tokens) == 4
+
+
+# --------------------------------------------------------------------------
+# exact rejection sampling: unit + statistical identity
+# --------------------------------------------------------------------------
+
+def test_residual_probs_exact_on_handbuilt_cases():
+    # zero overlap: residual is exactly p (Z = 1)
+    p = jnp.asarray([0.5, 0.5, 0.0, 0.0])
+    q = jnp.asarray([0.0, 0.0, 0.5, 0.5])
+    np.testing.assert_allclose(np.asarray(residual_probs(p, q)),
+                               np.asarray(p), atol=0)
+    # identical: Z = 0; the total-function convention returns p
+    np.testing.assert_allclose(np.asarray(residual_probs(p, p)),
+                               np.asarray(p), atol=0)
+    # one-hot target: residual collapses to the same one-hot
+    p1 = jnp.asarray([0.0, 1.0, 0.0, 0.0])
+    q1 = jnp.asarray([0.25, 0.25, 0.25, 0.25])
+    np.testing.assert_allclose(np.asarray(residual_probs(p1, q1)),
+                               np.asarray(p1), atol=1e-7)
+    # generic: max(0, p - q) / Z, batched over leading axes
+    p2 = jnp.asarray([[0.6, 0.2, 0.1, 0.1]])
+    q2 = jnp.asarray([[0.1, 0.5, 0.2, 0.2]])
+    want = np.asarray([[1.0, 0.0, 0.0, 0.0]]) * 0.5 / 0.5
+    np.testing.assert_allclose(np.asarray(residual_probs(p2, q2)), want,
+                               atol=1e-7)
+
+
+def test_verify_greedy_is_exact_argmax_prefix():
+    """Greedy verify accepts exactly the longest argmax-matching prefix
+    and corrects/appends with the target argmax."""
+    V = 8
+    rng = np.random.default_rng(0)
+    p = rng.normal(size=(4, V)).astype(np.float32)
+    arg = [int(np.argmax(row)) for row in p]
+    q = rng.normal(size=(3, V)).astype(np.float32)
+    rng0 = jax.random.PRNGKey(0)
+    # all proposals match the target argmax: full accept + bonus
+    out, m = spec.verify(p, q, arg[:3], rng0=rng0, req_id=1, pos0=0,
+                         temperature=0.0)
+    assert m == 3 and out == arg
+    # mismatch at index 1: keep 1, emit the target argmax there
+    props = [arg[0], (arg[1] + 1) % V, arg[2]]
+    out, m = spec.verify(p, q, props, rng0=rng0, req_id=1, pos0=0,
+                         temperature=0.0)
+    assert m == 1 and out == arg[:2]
+    # empty window (k_eff == 0): plain greedy step on the single row
+    out, m = spec.verify(p[:1], q[:0], [], rng0=rng0, req_id=1, pos0=0,
+                         temperature=0.0)
+    assert m == 0 and out == arg[:1]
+
+
+def _chi_square(counts, probs):
+    n = counts.sum()
+    exp = probs * n
+    return float(((counts - exp) ** 2 / np.maximum(exp, 1e-12)).sum())
+
+
+def test_verify_marginal_matches_target_chi_square():
+    """Statistical identity: over many seeded trials the emitted token's
+    empirical distribution matches the analytic *target* softmax (chi-
+    square below the dof=V-1 99.9% critical value) and does **not**
+    match the draft's (the power check) — exactly the Leviathan/Chen
+    speculative-sampling theorem, through the real ``spec.propose`` /
+    ``spec.verify`` code path."""
+    V, T, N = 6, 0.9, 1500
+    rng = np.random.default_rng(5)
+    p_log = (rng.normal(size=(2, V)) * 2).astype(np.float32)
+    q_log = (rng.normal(size=(1, V)) * 2).astype(np.float32)
+    p = np.asarray(jax.nn.softmax(jnp.asarray(p_log[0]) / T))
+    q = np.asarray(jax.nn.softmax(jnp.asarray(q_log[0]) / T))
+    rng0 = jax.random.PRNGKey(0)
+    counts = np.zeros(V)
+    accepted = 0
+    for trial in range(N):
+        t = spec.propose(jnp.asarray(q_log)[None], rng0, trial, 9,
+                         temperature=T)
+        out, m = spec.verify(p_log, q_log, [t], rng0=rng0, req_id=trial,
+                             pos0=9, temperature=T)
+        counts[out[0]] += 1
+        accepted += m
+    crit = 24.32    # chi-square 0.999 quantile, dof = 5
+    chi_p = _chi_square(counts, p)
+    chi_q = _chi_square(counts, q)
+    assert chi_p < crit, (chi_p, counts / N, p)
+    assert chi_q > crit, (chi_q, counts / N, q)   # power: p and q differ
+    # analytic acceptance rate sum(min(p, q)) within a loose band
+    a = float(np.minimum(p, q).sum())
+    assert abs(accepted / N - a) < 0.05, (accepted / N, a)
+
+
+def test_verify_key_stream_matches_plain_decode_when_q_equals_p():
+    """With q == p every proposal accepts, and the emitted stream over
+    any window split equals the plain-decode stream token for token —
+    the k-invariance of the key discipline, isolated from the engine."""
+    V, T = 11, 0.8
+    rng = np.random.default_rng(2)
+    rows = (rng.normal(size=(12, V)) * 1.5).astype(np.float32)
+    rng0 = jax.random.PRNGKey(7)
+    rid = 123
+    plain = [int(sample_logits(jnp.asarray(rows[i])[None, None, :] / T,
+                               request_key(rng0, rid, i),
+                               temperature=1.0)[0, 0])
+             for i in range(10)]
+    for k in (1, 2, 5):
+        got, pos = [], 0
+        while len(got) < 10:
+            n = min(k, 10 - pos - 1) if pos < 9 else 0
+            props = [spec.propose(jnp.asarray(rows[pos + i])[None, None],
+                                  rng0, rid, pos + i, temperature=T)
+                     for i in range(n)]
+            out, m = spec.verify(rows[pos: pos + n + 1], rows[pos: pos + n],
+                                 props, rng0=rng0, req_id=rid, pos0=pos,
+                                 temperature=T)
+            assert m == n, "q == p must accept every proposal"
+            got.extend(out)
+            pos += len(out)
+        assert got[:10] == plain, k
+
+
+def test_rejection_draw_invariant_to_window_offset():
+    """The accept/residual draws at an absolute position depend only on
+    (rng0, req_id, position): a rejection at position 7 resamples the
+    same token whether the window started at 7 or at 5."""
+    V, T = 9, 1.0
+    rng = np.random.default_rng(3)
+    # q concentrates where p has little mass: rejections are common
+    p_row = (rng.normal(size=V)).astype(np.float32)
+    q_row = p_row[::-1].copy() * 3
+    shared = (rng.normal(size=(2, V))).astype(np.float32)   # positions 5, 6
+    rng0 = jax.random.PRNGKey(11)
+    rid = 9
+    # window starting at 7, single proposal
+    prop7 = spec.propose(jnp.asarray(q_row)[None, None], rng0, rid, 7,
+                         temperature=T)
+    p_log = np.stack([p_row, rng.normal(size=V).astype(np.float32)])
+    out_a, m_a = spec.verify(p_log, q_row[None], [prop7], rng0=rng0,
+                             req_id=rid, pos0=7, temperature=T)
+    # window starting at 5 whose first two positions accept (q == p
+    # there), reaching position 7 at window index 2
+    props = [spec.propose(jnp.asarray(shared[i])[None, None], rng0, rid,
+                          5 + i, temperature=T) for i in range(2)]
+    props.append(prop7)
+    p_log_b = np.concatenate([shared, p_log], 0)
+    q_log_b = np.stack([shared[0], shared[1], q_row])
+    out_b, m_b = spec.verify(p_log_b, q_log_b, props, rng0=rng0,
+                             req_id=rid, pos0=5, temperature=T)
+    assert m_b >= 2, "q == p prefix must accept"
+    assert out_b[2] == out_a[0], (out_a, out_b)
+    assert m_b - 2 == m_a
+    # and the dedicated draw streams never alias the proposal stream
+    k0 = request_key(rng0, rid, 7)
+    assert not np.array_equal(np.asarray(spec.accept_key(rng0, rid, 7)),
+                              np.asarray(k0))
+    assert not np.array_equal(np.asarray(spec.residual_key(rng0, rid, 7)),
+                              np.asarray(k0))
+    assert not np.array_equal(np.asarray(spec.accept_key(rng0, rid, 7)),
+                              np.asarray(spec.residual_key(rng0, rid, 7)))
+
+
+# --------------------------------------------------------------------------
+# rollback property: allocator state restored bit-exactly
+# --------------------------------------------------------------------------
+
+_PREFILL_FRAGS = {}
+
+
+def _frag(cfg, n):
+    if n not in _PREFILL_FRAGS:
+        params = _params(cfg, 0)
+        _, frag = M.prefill(params, cfg, jnp.ones((1, n), jnp.int32),
+                            max_len=64)
+        _PREFILL_FRAGS[n] = frag
+    return _PREFILL_FRAGS[n]
+
+
+def _alloc_state(pkv, cache):
+    return ([list(f) for f in pkv._free],
+            {s: list(p) for s, p in pkv._slot_pages.items()},
+            np.asarray(cache["page_table"]).tolist(),
+            np.asarray(cache["cur_len"]).tolist())
+
+
+if given is not None:
+    @given(ps=st.sampled_from((4, 8, 16)),
+           lens=st.lists(st.sampled_from((3, 9, 17)), min_size=1,
+                         max_size=3),
+           target=st.integers(0, 2),
+           d=st.integers(0, 9),
+           j=st.integers(1, 10))
+    def test_rollback_restores_allocator_bit_exactly(ps, lens, target,
+                                                     d, j):
+        """Twin-allocator property: allocator A admits slots, grows the
+        target slot for a (d+1)-token verify window, then rolls back to
+        keep j tokens; allocator B (identical admissions) only ever
+        allocates for the j kept tokens.  Free lists (per shard, exact
+        order), slot page lists, the device page table and ``cur_len``
+        must match bit-exactly — including windows and keeps that
+        straddle page boundaries, which hypothesis hits for every
+        page size here."""
+        cfg = _tcfg()
+        target %= len(lens)
+        L0 = lens[target]
+        d = min(d, 64 - 1 - L0)
+        j = min(j, d + 1)
+        new_len = L0 + j
+        pkvs, caches = [], []
+        for _ in range(2):
+            pkv = PagedKVCache(cfg, 4, 64, dtype=jnp.float32, page_size=ps,
+                               n_pages=40)
+            cache = pkv.init_cache()
+            for s, n in enumerate(lens):
+                cache = pkv.admit(cache, s, _frag(cfg, n), n)
+            pkvs.append(pkv)
+            caches.append(cache)
+        (A, B), (ca, cb) = pkvs, caches
+        # A: grow for the window, emulate the verify's cur_len advance,
+        # then reject down to j kept tokens
+        ca = A.ensure(ca, target, L0 + d)
+        ca = dict(ca)
+        ca["cur_len"] = ca["cur_len"].at[target].set(L0 + d + 1)
+        ca = A.rollback(ca, target, new_len)
+        # B: the counterfactual that only ever appended j tokens
+        cb = B.ensure(cb, target, new_len - 1)
+        cb = dict(cb)
+        cb["cur_len"] = cb["cur_len"].at[target].set(new_len)
+        assert _alloc_state(A, ca) == _alloc_state(B, cb)
+        # rolling back pages below the admission floor is refused
+        # implicitly: a second rollback to the same length is a no-op
+        ca2 = A.rollback(ca, target, new_len)
+        assert _alloc_state(A, ca2) == _alloc_state(B, cb)
+
+
+# --------------------------------------------------------------------------
+# sharded variant (slow tier-2)
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_spec_sharded_data_mesh_bit_identical():
+    """Acceptance: greedy speculative decoding on a 2-device data mesh
+    (sharded page pool, monolithic draft cache under GSPMD) emits the
+    same tokens as the target-only engine on the same mesh and as the
+    single-device run."""
+    run_subprocess("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.configs import get, smoke_variant
+        from repro.models import model as M
+        from repro.serving import GenerationEngine, Request
+
+        cfg = smoke_variant(get('qwen3-8b'))
+        dcfg = smoke_variant(get('xlstm-350m'))
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        dparams = M.init_params(jax.random.PRNGKey(1), dcfg)
+
+        def stream():
+            return [Request(prompt=[i + 1] * (4 + 2 * i),
+                            max_new_tokens=6 + i, id=43_000 + i)
+                    for i in range(4)]
+
+        def serve(mesh, **kw):
+            eng = GenerationEngine(params, cfg, max_batch=2, max_len=64,
+                                   mesh=mesh, **kw)
+            reqs = stream()
+            for r in reqs:
+                eng.submit(r)
+            eng.run()
+            assert all(r.done for r in reqs)
+            return [r.out_tokens for r in reqs], eng
+
+        single, _ = serve(None)
+        mesh = Mesh(np.array(jax.devices()[:2]), ('data',))
+        base, _ = serve(mesh)
+        spec_t, eng = serve(mesh, draft_params=dparams, draft_cfg=dcfg,
+                            spec_k=4)
+        assert eng.spec_on and eng.paged.n_shards == 2
+        assert base == single, 'mesh target-only deviated'
+        assert spec_t == base, 'mesh speculative deviated'
+        sc = eng.spec_counters()
+        assert sc['spec_rounds'] > 0
+        print('sharded speculative == target-only == single-device: OK')
+    """, devices=2)
