@@ -126,6 +126,7 @@ def run(verbose: bool = True):
     over = run_oversubscribed(verbose=verbose)
     mixed = run_mixed(verbose=verbose)
     speculative = run_speculative(verbose=verbose)
+    prefix = run_prefix_shared(verbose=verbose)
     sharded = run_sharded(verbose=verbose)
     return {
         "layers": len(rows),
@@ -136,6 +137,7 @@ def run(verbose: bool = True):
         "oversubscribed": over,
         "mixed": mixed,
         "speculative": speculative,
+        "prefix": prefix,
         "sharded": sharded,
     }
 
@@ -249,6 +251,132 @@ def run_speculative(verbose: bool = True, spec_k: int = 4,
               f"{out['accept_rate']:.3f}, "
               f"{out['tokens_per_round']:.2f} tokens/round)")
         print("  spec tokens bit-identical to target-only: True")
+    return out
+
+
+def run_prefix_shared(verbose: bool = True):
+    """Cross-request prefix sharing on a chat-style workload.
+
+    Every request carries the same 48-token system prompt plus a short
+    per-user suffix.  The stream is served twice through the chunked
+    engine — sharing off, then sharing on — and the bench asserts the
+    sharing run is **bit-identical**, that the N-1 follow-up requests
+    all hit the prefix index, that while the hits are in flight they
+    hold ONE physical copy of the prefix pages (checked on the
+    refcounts and the page tables, not the stats), and that the hit
+    requests' wall-clock TTFT lands **strictly below** the no-sharing
+    baseline (the matched 48 of 51 prompt tokens are never recomputed,
+    so a hit pays one chunk step instead of seven).  Feeds the
+    ``prefix`` section of ``BENCH_serving.json`` (perf-smoke CI tier)."""
+    import time
+    from repro.serving.telemetry import Telemetry
+    cfg = smoke_variant(get(ARCHS[0]))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(11)
+    prefix = rng.integers(1, cfg.vocab_size, size=48).tolist()  # 6 pages
+    suffixes = [rng.integers(1, cfg.vocab_size, size=3).tolist()
+                for _ in range(6)]
+
+    def stream():
+        return [Request(prompt=prefix + sfx, max_new_tokens=8,
+                        id=40_000 + i)
+                for i, sfx in enumerate(suffixes)]
+
+    def drive(eng, reqs, ttft, t0):
+        for _ in range(10_000):
+            busy = eng.step()
+            now = time.perf_counter() - t0
+            for r in reqs:
+                if r.out_tokens and r.id not in ttft:
+                    ttft[r.id] = now
+            if not busy and not any(s is not None for s in eng.slots):
+                break
+        assert all(r.done for r in reqs)
+
+    def serve(sharing: bool):
+        tel = Telemetry()
+        eng = GenerationEngine(params, cfg, max_batch=3, max_len=64,
+                               cache_mode="paged", page_size=8,
+                               prefill_chunk=8, telemetry=tel,
+                               prefix_sharing=sharing)
+        reqs, ttft = stream(), {}
+        # the first request warms the index (a miss either way) ...
+        eng.submit(reqs[0])
+        drive(eng, reqs[:1], ttft, time.perf_counter())
+        # ... then the chat follow-ups arrive together
+        t0 = time.perf_counter()
+        for r in reqs[1:]:
+            eng.submit(r)
+        eng.step()
+        if sharing:
+            # one physical copy while the hits are in flight: every
+            # admitted slot's page table starts with the SAME pids,
+            # refcounted once per slot plus once for the index
+            slots = [eng.slots.index(r) for r in reqs[1:] if r in eng.slots]
+            rows = [eng.paged._slot_pages[s][:len(prefix) // 8]
+                    for s in slots]
+            assert len(rows) >= 2 and all(r == rows[0] for r in rows), rows
+            for pid in rows[0]:
+                assert eng.paged._ref[pid] == len(rows) + 1
+        now = time.perf_counter() - t0
+        for r in reqs:
+            if r.out_tokens and r.id not in ttft:
+                ttft[r.id] = now
+        drive(eng, reqs, ttft, t0)
+        hit_ttft = [ttft[r.id] for r in reqs[1:]]
+        reg = tel.registry
+        return {
+            "tokens": [r.out_tokens for r in reqs],
+            "ttft_hit_mean_s": sum(hit_ttft) / len(hit_ttft),
+            "chunk_tokens": eng.n_chunk_tokens,
+            "hits": reg.counter("prefix_hit_total").value,
+            "misses": reg.counter("prefix_miss_total").value,
+            "match_tokens": reg.counter("prefix_match_tokens_total").value,
+            "stats": eng.paged.stats(),
+        }
+
+    serve(False)                        # warm the jit caches
+    off = serve(False)
+    on = serve(True)
+    assert on.pop("tokens") == off.pop("tokens"), \
+        "prefix sharing deviated from the no-sharing engine"
+    sp = on.pop("stats")
+    off.pop("stats")
+    n = len(suffixes)
+    assert on["hits"] == n - 1 and on["misses"] == 1, (on["hits"],
+                                                      on["misses"])
+    assert on["match_tokens"] == (n - 1) * len(prefix)
+    assert sp["prefix_cow_splits_total"] == 0
+    assert on["chunk_tokens"] == off["chunk_tokens"] - on["match_tokens"]
+    assert on["ttft_hit_mean_s"] < off["ttft_hit_mean_s"], (on, off)
+    out = {
+        "n_requests": n,
+        "prefix_tokens": len(prefix),
+        "hit_rate": on["hits"] / n,
+        "match_tokens": on["match_tokens"],
+        "chunk_tokens_nosharing": off["chunk_tokens"],
+        "chunk_tokens_shared": on["chunk_tokens"],
+        "ttft_hit_nosharing_s": off["ttft_hit_mean_s"],
+        "ttft_hit_shared_s": on["ttft_hit_mean_s"],
+        "ttft_speedup": off["ttft_hit_mean_s"] / max(on["ttft_hit_mean_s"],
+                                                     1e-9),
+        "cow_splits": sp["prefix_cow_splits_total"],
+        "prefix_retired_total": sp["prefix_retired_total"],
+        "bit_identical_to_nosharing": True,
+    }
+    if verbose:
+        print(f"\nprefix sharing ({ARCHS[0]}, batch 3, {n} chat requests, "
+              f"{len(prefix)}-token shared system prompt):")
+        print(f"  hit rate {out['hit_rate']:.2f} "
+              f"({on['hits']} hits / {on['misses']} miss), "
+              f"{out['match_tokens']} prompt tokens never recomputed")
+        print(f"  prefill chunk tokens {out['chunk_tokens_nosharing']} -> "
+              f"{out['chunk_tokens_shared']}")
+        print(f"  hit TTFT {out['ttft_hit_nosharing_s'] * 1e3:7.1f} ms -> "
+              f"{out['ttft_hit_shared_s'] * 1e3:7.1f} ms "
+              f"({out['ttft_speedup']:.2f}x)")
+        print("  shared tokens bit-identical to no-sharing: True "
+              "(one physical prefix copy asserted on the refcounts)")
     return out
 
 

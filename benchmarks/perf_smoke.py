@@ -18,6 +18,12 @@ the first point of the repo's benchmark trajectory:
     (``kvcache_bench.run_speculative``): acceptance rate (1.0 by
     construction — gated as a correctness canary) and spec vs
     target-only tok/s (bit-identity is asserted inside);
+  * ``prefix`` — the chat-style common-prefix stream served with prefix
+    sharing on vs off (``kvcache_bench.run_prefix_shared``): hit rate
+    and matched-token counts (deterministic — gated as counts/bands),
+    plus the hit requests' TTFT against the no-sharing baseline
+    (strictly-below is asserted inside; one physical prefix copy and
+    bit-identity too);
   * ``decode`` — the ECF8 decode microbench at its smallest shape
     (``decode_microbench``): MB/s of the jnp and fixed-rate paths.
 
@@ -56,6 +62,10 @@ GATES = {
     ("oversubscribed", "n_preempted"): "count",
     ("speculative", "spec_tok_per_s"): "higher",
     ("speculative", "accept_rate"): "band",
+    ("prefix", "hit_rate"): "band",
+    ("prefix", "chunk_tokens_shared"): "count",
+    ("prefix", "cow_splits"): "count",
+    ("prefix", "ttft_hit_shared_s"): "lower",
     ("decode", "tpu_jnp_MBps"): "higher",
     ("decode", "fr_MBps"): "higher",
 }
@@ -103,6 +113,9 @@ def collect(verbose: bool = True, repeats: int = 3,
     specs = [kvcache_bench.run_speculative(verbose=verbose and i == 0)
              for i in range(repeats)]
     spec = max(specs, key=lambda r: r["spec_tok_per_s"])
+    prefs = [kvcache_bench.run_prefix_shared(verbose=verbose and i == 0)
+             for i in range(repeats)]
+    pref = min(prefs, key=lambda r: r["ttft_hit_shared_s"])
     return {
         "schema": 1,
         "probe_mflops": probe,
@@ -150,6 +163,22 @@ def collect(verbose: bool = True, repeats: int = 3,
             "target_tok_per_s": spec["target_tok_per_s"],
             "spec_tok_per_s": spec["spec_tok_per_s"],
             "speedup": spec["speedup"],
+        },
+        "prefix": {
+            # hit rate / matched tokens / CoW splits are deterministic
+            # on this workload; the TTFT pair is best-of like the other
+            # timed benches (strictly-below is asserted per run inside)
+            "n_requests": pref["n_requests"],
+            "prefix_tokens": pref["prefix_tokens"],
+            "hit_rate": pref["hit_rate"],
+            "match_tokens": pref["match_tokens"],
+            "chunk_tokens_shared": pref["chunk_tokens_shared"],
+            "chunk_tokens_nosharing": pref["chunk_tokens_nosharing"],
+            "cow_splits": pref["cow_splits"],
+            "ttft_hit_nosharing_s": min(p["ttft_hit_nosharing_s"]
+                                        for p in prefs),
+            "ttft_hit_shared_s": pref["ttft_hit_shared_s"],
+            "ttft_speedup": max(p["ttft_speedup"] for p in prefs),
         },
         "decode": {
             "tpu_jnp_MBps": dec["tpu_jnp_MBps"],
@@ -224,6 +253,12 @@ def main(argv=None):
           f"target-only {spc['target_tok_per_s']:.1f} "
           f"({spc['speedup']:.2f}x at accept rate "
           f"{spc['accept_rate']:.2f}, k={spc['k']})")
+    pfx = measured["prefix"]
+    print(f"[perf-smoke] prefix sharing hit rate {pfx['hit_rate']:.2f}, "
+          f"hit TTFT {pfx['ttft_hit_shared_s'] * 1e3:.0f} ms vs "
+          f"no-sharing {pfx['ttft_hit_nosharing_s'] * 1e3:.0f} ms "
+          f"({pfx['ttft_speedup']:.2f}x, "
+          f"{pfx['match_tokens']} prompt tokens never recomputed)")
     print(f"[perf-smoke] telemetry overhead "
           f"{srv['telemetry_overhead_frac']:.1%} tok/s "
           f"(target < 2%; the published chunked numbers come from the "

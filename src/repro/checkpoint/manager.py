@@ -46,6 +46,41 @@ from repro.core import fp8, tpu_format
 
 _SEP = "\x1e"  # path separator in flattened keys (never appears in names)
 
+# live tmp-dir registry: every in-flight ``save_tree`` in this process
+# registers its (unique) tmp path here so GC never reclaims a directory a
+# concurrent writer is still filling.  Tmp names carry the owning pid so a
+# *different* process's GC can distinguish a live foreign writer from the
+# orphan of a crashed one.
+_TMP_LOCK = threading.Lock()
+_LIVE_TMPS: set = set()
+
+
+def _tmp_is_orphan(path: str) -> bool:
+    """True when a ``step_XXXXXXXX.tmp[.pid.tid]`` dir belongs to no live
+    writer and is safe to garbage-collect."""
+    with _TMP_LOCK:
+        if path in _LIVE_TMPS:
+            return False
+    name = os.path.basename(path)
+    if name.endswith(".tmp"):
+        # legacy unowned tmp name: only ever left behind by a crash
+        return True
+    parts = name.rsplit(".", 2)         # step_XXXXXXXX.tmp, pid, tid
+    try:
+        pid = int(parts[1])
+    except (IndexError, ValueError):
+        return True
+    if pid == os.getpid():
+        # ours but unregistered -> the writer already failed/finished
+        return True
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return True                     # owning process is gone
+    except OSError:
+        pass                            # e.g. EPERM: alive, other user
+    return False
+
 
 def _flatten(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -69,10 +104,27 @@ def _crc(a: np.ndarray) -> int:
 
 
 def save_tree(tree, directory: str, step: int, compress: str = "none"):
-    """Synchronous atomic checkpoint write.  compress: none|ecf8."""
+    """Synchronous atomic checkpoint write.  compress: none|ecf8.
+
+    Each writer gets a **unique** tmp dir (``step_XXXXXXXX.tmp.<pid>.<tid>``)
+    registered in the live-writer set, so concurrent writers (async worker
+    vs. main-thread ``save_sync``, or two processes sharing a directory)
+    never delete each other's in-progress work and GC only reclaims
+    orphans."""
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
-    tmp = final + ".tmp"
+    tmp = f"{final}.tmp.{os.getpid()}.{threading.get_ident()}"
+    with _TMP_LOCK:
+        _LIVE_TMPS.add(tmp)
+    try:
+        return _save_tree_into(tree, tmp, final, step, compress)
+    finally:
+        with _TMP_LOCK:
+            _LIVE_TMPS.discard(tmp)
+        shutil.rmtree(tmp, ignore_errors=True)   # no-op after rename
+
+
+def _save_tree_into(tree, tmp: str, final: str, step: int, compress: str):
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
@@ -105,9 +157,16 @@ def save_tree(tree, directory: str, step: int, compress: str = "none"):
     np.savez(os.path.join(tmp, "arrays.npz"), **raw)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+    try:
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except OSError:
+        # another writer renamed its copy of this step between our rmtree
+        # and rename: the step is durable either way, discard our tmp
+        if not os.path.isfile(os.path.join(final, "manifest.json")):
+            raise
+        shutil.rmtree(tmp, ignore_errors=True)
     return final
 
 
@@ -177,10 +236,18 @@ def available_steps(directory: str) -> list:
         return []
     out = []
     for name in os.listdir(directory):
-        if name.startswith("step_") and not name.endswith(".tmp") and \
-                os.path.exists(os.path.join(directory, name,
-                                            "manifest.json")):
+        if not name.startswith("step_") or ".tmp" in name:
+            continue
+        if not os.path.exists(os.path.join(directory, name,
+                                           "manifest.json")):
+            continue
+        try:
             out.append(int(name[5:]))
+        except ValueError:
+            # stray entry (step_foo/, junk from an interrupted copy):
+            # skip it instead of taking down restore
+            print(f"[checkpoint] ignoring stray entry {name!r} in "
+                  f"{directory}")
     return sorted(out)
 
 
@@ -220,11 +287,15 @@ class CheckpointManager:
         for s in steps[: max(0, len(steps) - self.keep)]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
                           ignore_errors=True)
-        # stale tmp dirs from crashes
+        # stale tmp dirs from crashes — but never one a live writer owns
+        # (async worker GC racing a main-thread ``save_sync`` used to
+        # delete the sync writer's half-written tmp out from under it)
         for name in os.listdir(self.directory):
-            if name.endswith(".tmp"):
-                shutil.rmtree(os.path.join(self.directory, name),
-                              ignore_errors=True)
+            if ".tmp" not in name:
+                continue
+            path = os.path.join(self.directory, name)
+            if _tmp_is_orphan(path):
+                shutil.rmtree(path, ignore_errors=True)
 
     def save_async(self, step: int, tree):
         """Snapshot to host now; write on the background thread."""
@@ -247,5 +318,11 @@ class CheckpointManager:
         return restore_tree(self.directory, template_tree, shardings)
 
     def close(self):
+        """Drain the queue, stop the worker, and surface any pending
+        write errors (a failed final async save must not be swallowed)."""
         self._q.put(None)
         self._q.join()
+        self._thread.join(timeout=30.0)
+        if self._errors:
+            errs, self._errors = self._errors, []
+            raise IOError(f"async checkpoint writes failed: {errs}")

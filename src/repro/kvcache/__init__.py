@@ -10,5 +10,5 @@
               through the Pallas decode path.
 """
 from . import codec, kernels, paged, swap  # noqa: F401
-from .paged import OutOfPages, PagedKVCache  # noqa: F401
+from .paged import OutOfPages, PagedKVCache, PrefixIndex  # noqa: F401
 from .swap import SwapExhausted, SwapStore  # noqa: F401

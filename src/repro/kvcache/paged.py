@@ -191,6 +191,45 @@ def page_gather(pool, page_table, cpool=None):
 # host-side controller
 # --------------------------------------------------------------------------
 
+class PrefixIndex:
+    """Content-addressed index of page-aligned prompt-prefix blocks.
+
+    Key: the token content of blocks ``0..i`` as a tuple (the dict hashes
+    it; equality is checked on lookup, so a hash collision can never
+    mis-match a prefix — bit-identity survives by construction).  Value:
+    the physical entry holding block ``i``'s K/V — a raw pool page id,
+    or a negative swap sentinel (``-(key + 1)``) once the page was
+    retired to the swap tier's prefix cache.  Dict insertion order
+    doubles as LRU order: :meth:`touch` moves a matched key to the back,
+    reclaim walks from the front."""
+
+    def __init__(self):
+        self._entries: dict[tuple, int] = {}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key):
+        return self._entries.get(key)
+
+    def put(self, key, entry: int) -> None:
+        """Insert or update; an update keeps the key's LRU position."""
+        self._entries[key] = entry
+
+    def touch(self, key) -> None:
+        self._entries[key] = self._entries.pop(key)
+
+    def drop(self, key) -> None:
+        self._entries.pop(key, None)
+
+    def lru_keys(self) -> list:
+        """Keys, least recently matched first."""
+        return list(self._entries)
+
+    def entries(self):
+        return self._entries.values()
+
+
 class PagedKVCache:
     """Allocator + lifecycle manager for the paged, compressible cache."""
 
@@ -279,6 +318,17 @@ class PagedKVCache:
         self._slot_pages: dict[int, list[int]] = {}
         self._skip: dict[int, set[int]] = {}
         self._cold_bytes: dict[int, int] = {}
+        # physical-page reference counts: every live raw pid has an entry
+        # (1 = private).  Holders are slots (one ref per slot whose page
+        # list contains the pid) and the prefix index (one ref per index
+        # entry).  A pid returns to its shard's free list only when the
+        # count hits zero — the audit invariant of release/rollback/
+        # evict/compress, property-tested in tests/test_prefix_sharing.py
+        self._ref: dict[int, int] = {}
+        self.prefix = None              # PrefixIndex (enable_prefix_sharing)
+        self.n_prefix_retired = 0       # index pages retired to swap
+        self.n_prefix_dropped = 0       # index pages dropped (no swap room)
+        self.n_cow_splits = 0           # shared pages split before a write
         self.swap = None                # SwapStore (attach_swap)
         self.telemetry = None           # serving.telemetry.Telemetry
         #   (engine-set; evict/fault publish page counts and host<->device
@@ -330,6 +380,24 @@ class PagedKVCache:
 
     # -- allocator ---------------------------------------------------------
 
+    def _alloc_raw(self, sh: int) -> int:
+        """Pop a raw page off ``sh``'s free list with refcount 1."""
+        pid = self._free[sh].pop()
+        self._ref[pid] = 1
+        return pid
+
+    def _incref(self, pid: int) -> None:
+        self._ref[pid] = self._ref.get(pid, 0) + 1
+
+    def _decref(self, pid: int) -> None:
+        """Drop one reference; the page frees only when nobody holds it."""
+        n = self._ref.get(pid, 1) - 1
+        if n <= 0:
+            self._ref.pop(pid, None)
+            self._free[pid // self.pages_per_shard].append(pid)
+        else:
+            self._ref[pid] = n
+
     def shard_of_slot(self, slot: int) -> int:
         """Batch shard owning ``slot`` (contiguous slot ranges per shard)."""
         return slot // self.slots_per_shard
@@ -376,9 +444,11 @@ class PagedKVCache:
         sh = self.shard_of_slot(slot)
         free = self._free[sh]
         if len(free) < need:
+            cache = self._reclaim_prefix(cache, sh, need - len(free))
+        if len(free) < need:
             raise OutOfPages(f"shard {sh}: slot {slot} needs {need} pages, "
                              f"{len(free)} free")
-        pids = [free.pop() for _ in range(need)]
+        pids = [self._alloc_raw(sh) for _ in range(need)]
         self._slot_pages[slot] = pids
         self._skip[slot] = set()
 
@@ -424,9 +494,11 @@ class PagedKVCache:
         sh = self.shard_of_slot(slot)
         free = self._free[sh]
         if len(free) < need:
+            cache = self._reclaim_prefix(cache, sh, need - len(free))
+        if len(free) < need:
             raise OutOfPages(f"shard {sh}: slot {slot} needs {need} pages, "
                              f"{len(free)} free")
-        pids = [free.pop() for _ in range(need)]
+        pids = [self._alloc_raw(sh) for _ in range(need)]
         self._slot_pages[slot] = pids
         self._skip[slot] = set()
         row = np.zeros(self.pages_per_slot, np.int32)
@@ -456,9 +528,11 @@ class PagedKVCache:
         p = min(pos // self.page_size, self.pages_per_slot - 1)
         while len(pages) <= p:
             if not self._free[sh]:
+                cache = self._reclaim_prefix(cache, sh, 1)
+            if not self._free[sh]:
                 raise OutOfPages(
                     f"shard {sh}: slot {slot} needs page {len(pages)}")
-            pid = self._free[sh].pop()
+            pid = self._alloc_raw(sh)
             cache = dict(cache)
             cache["page_table"] = cache["page_table"].at[
                 slot, len(pages)].set(pid)
@@ -500,7 +574,7 @@ class PagedKVCache:
                         f"can be rolled back")
                 cache["page_table"] = cache["page_table"].at[
                     slot, len(pages)].set(GARBAGE_PAGE)
-                self._free[pid // self.pages_per_shard].append(pid)
+                self._decref(pid)
         cache["cur_len"] = cache["cur_len"].at[slot].set(n_tokens)
         return cache
 
@@ -516,7 +590,7 @@ class PagedKVCache:
                 self._cold_free[cs // max(self.cold_per_shard, 1)].append(cs)
                 self._cold_bytes.pop(cs, None)
             elif e != GARBAGE_PAGE:
-                self._free[e // self.pages_per_shard].append(e)
+                self._decref(e)     # shared prefix pages stay for the index
         self._skip.pop(slot, None)
         cache = dict(cache)
         cache["page_table"] = cache["page_table"].at[slot].set(
@@ -629,9 +703,13 @@ class PagedKVCache:
                 self._cold_free[cs // max(self.cold_per_shard, 1)].append(cs)
                 self._cold_bytes.pop(cs, None)
             else:
+                # a shared page gets a *private* swap copy and a decref:
+                # the prefix index keeps its own (still-resident) reference,
+                # so sharing degrades gracefully under memory pressure and
+                # detach_slot's all-swapped assertion holds
                 sp = self._encode_raw_page(cache, e)
                 key = self.swap.put(sp, sh)
-                self._free[e // self.pages_per_shard].append(e)
+                self._decref(e)
             pages[p] = -(key + 1)
             cache["page_table"] = cache["page_table"].at[slot, p].set(
                 -(key + 1))
@@ -675,6 +753,9 @@ class PagedKVCache:
             raw_need += int(not to_cold)
             plan.append((p, sp, to_cold))
         if raw_need > len(self._free[sh]):
+            cache = self._reclaim_prefix(
+                cache, sh, raw_need - len(self._free[sh]))
+        if raw_need > len(self._free[sh]):
             raise OutOfPages(
                 f"shard {sh}: faulting {len(idxs)} swapped pages of slot "
                 f"{slot} needs {raw_need} raw pages, "
@@ -705,7 +786,7 @@ class PagedKVCache:
                 self._cold_bytes[cs] = sp.nbytes
                 entry = self.n_pages + cs
             else:
-                pid = self._free[sh].pop()
+                pid = self._alloc_raw(sh)
                 raw_jobs.extend((ent, pid) for ent in sp.entries)
                 entry = pid
             pages[p] = entry
@@ -805,6 +886,248 @@ class PagedKVCache:
             jnp.asarray(row))
         return cache
 
+    # -- cross-request prefix sharing --------------------------------------
+
+    def enable_prefix_sharing(self) -> None:
+        """Attach a :class:`PrefixIndex` so requests with a common
+        page-aligned prompt prefix share one physical copy of its pages
+        (copy-on-write protected).  Single-shard only: page ids are
+        shard-local, so a prefix cached by one shard would be unreachable
+        from slots of any other."""
+        if self.n_shards != 1:
+            raise ValueError(
+                f"prefix sharing requires n_shards == 1 (got "
+                f"{self.n_shards}): pages are shard-local and slots must "
+                f"gather only their own shard's pages")
+        if self.prefix is None:
+            self.prefix = PrefixIndex()
+
+    @property
+    def prefix_sharing(self) -> bool:
+        return self.prefix is not None
+
+    def _prefix_key(self, prompt, i: int) -> tuple:
+        """Content address of prompt block ``i``: the token ids of blocks
+        ``0..i``.  Keys are prefix-closed — block ``i``'s K/V is fully
+        determined by (and only by) the tokens in the key, so equal keys
+        imply bit-identical page content."""
+        return tuple(prompt[: (i + 1) * self.page_size])
+
+    def match_prefix(self, prompt) -> int:
+        """Longest index-resident prefix of ``prompt``, in tokens (always
+        a multiple of ``page_size``).
+
+        Capped at ``(len(prompt) - 1) // page_size`` blocks so the final
+        prompt token is always prefilled (it produces the first-token
+        logits) and the first unmatched write lands exactly on the match
+        boundary — writes never land inside a matched page.  Swap-retired
+        entries whose key was LRU-evicted from the store drop out of the
+        index here."""
+        if self.prefix is None or not len(prompt):
+            return 0
+        n = 0
+        for i in range((len(prompt) - 1) // self.page_size):
+            key = self._prefix_key(prompt, i)
+            ent = self.prefix.get(key)
+            if ent is None:
+                break
+            if ent < 0 and (self.swap is None
+                            or not self.swap.contains(-ent - 1)):
+                self.prefix.drop(key)
+                break
+            n += 1
+        return n * self.page_size
+
+    def admit_shared(self, cache: dict, slot: int, prompt, extra: int):
+        """Admit a chunked-prefill slot against the prefix index ->
+        ``(cache, matched_tokens)``.
+
+        Matched raw pages are increffed (the slot becomes a co-holder of
+        the same physical page); matched swap-retired pages are faulted
+        back bit-exactly (batch Pallas decode) into fresh raw pages that
+        the index re-adopts; ``extra`` fresh pages cover the unmatched
+        suffix.  ``cur_len`` starts at ``matched_tokens``, so prefill
+        chunks resume at the match boundary with zero new compilations
+        (``prefill_chunk`` reads its start position in-graph)."""
+        sh = self.shard_of_slot(slot)
+        ps = self.page_size
+        cache = dict(cache)
+        shared: list[int] = []
+        raw_jobs = []               # (SwapEntry, pid) for _restore_raw
+        n_faulted = 0
+        t0 = time.perf_counter()
+        if self.prefix is not None:
+            for i in range((len(prompt) - 1) // ps if len(prompt) else 0):
+                key = self._prefix_key(prompt, i)
+                ent = self.prefix.get(key)
+                if ent is None:
+                    break
+                if ent < 0:
+                    k = -ent - 1
+                    if self.swap is None or not self.swap.contains(k):
+                        self.prefix.drop(key)
+                        break
+                    if not self._free[sh]:
+                        cache = self._reclaim_prefix(cache, sh, 1)
+                    if not self._free[sh]:
+                        break       # match shrinks; the suffix is prefilled
+                    sp = self.swap.pop(k)
+                    ent = self._alloc_raw(sh)       # the index's reference
+                    raw_jobs.extend((e2, ent) for e2 in sp.entries)
+                    self.prefix.put(key, ent)
+                    n_faulted += 1
+                self._incref(ent)                   # the slot's reference
+                self.prefix.touch(key)
+                shared.append(ent)
+        if raw_jobs:
+            cache = self._restore_raw(cache, raw_jobs)
+
+        extra = max(min(extra, self.pages_per_slot - len(shared)), 0)
+        free = self._free[sh]
+        if len(free) < extra:
+            cache = self._reclaim_prefix(cache, sh, extra - len(free))
+        if len(free) < extra:
+            for pid in shared:      # undo: the admission failed whole
+                self._decref(pid)
+            raise OutOfPages(f"shard {sh}: slot {slot} needs {extra} "
+                             f"pages past its shared prefix, "
+                             f"{len(free)} free")
+        pids = [self._alloc_raw(sh) for _ in range(extra)]
+        self._slot_pages[slot] = shared + pids
+        self._skip[slot] = set()
+        row = np.zeros(self.pages_per_slot, np.int32)
+        row[: len(shared) + extra] = shared + pids
+        cache["page_table"] = cache["page_table"].at[slot].set(
+            jnp.asarray(row))
+        cache["cur_len"] = cache["cur_len"].at[slot].set(len(shared) * ps)
+        if n_faulted and self.telemetry is not None:
+            self.telemetry.registry.counter(
+                "kvcache_fault_pages_total").inc(n_faulted)
+            if self.telemetry.tracer is not None:
+                self.telemetry.tracer.complete(
+                    "swap", "prefix_fault", "engine", t0,
+                    args={"slot": slot, "pages": n_faulted})
+        return cache, len(shared) * ps
+
+    def register_prefix(self, slot: int, prompt, n_tokens: int) -> None:
+        """Publish the slot's fully-prefilled, page-aligned prompt blocks
+        into the index (called after each prefill chunk lands).
+
+        Caps at ``len(prompt) // page_size`` blocks: a full prompt block
+        is never written again (the first decode write lands at position
+        ``len(prompt)``, in a later block), so published pages are
+        immutable while referenced.  Blocks whose content is already
+        indexed keep the incumbent copy (LRU-touched, not replaced)."""
+        if self.prefix is None:
+            return
+        pages = self._slot_pages.get(slot)
+        if pages is None:
+            return
+        nb = min(min(n_tokens, len(prompt)) // self.page_size, len(pages))
+        for i in range(nb):
+            pid = pages[i]
+            if not (GARBAGE_PAGE < pid < self.n_pages):
+                continue            # cold/swapped entries are not shareable
+            key = self._prefix_key(prompt, i)
+            if self.prefix.get(key) is not None:
+                self.prefix.touch(key)
+                continue
+            self.prefix.put(key, pid)
+            self._incref(pid)
+
+    def make_writable(self, cache: dict, slot: int, lo: int, hi: int):
+        """Copy-on-write guard: split any shared raw page of ``slot``
+        covering positions ``[lo, hi]`` into a private device copy before
+        an in-graph write lands there.
+
+        Block-aligned matching makes this structurally unreachable on the
+        normal path (writes start at the match boundary and full prompt
+        blocks are never rewritten), so it is a safety invariant, not the
+        common path; ``n_cow_splits`` counts actual splits."""
+        pages = self._slot_pages.get(slot)
+        if pages is None or self.prefix is None:
+            return cache
+        ps = self.page_size
+        sh = self.shard_of_slot(slot)
+        for p in range(lo // ps, min(hi // ps, len(pages) - 1) + 1):
+            pid = pages[p]
+            if (not (GARBAGE_PAGE < pid < self.n_pages)
+                    or self._ref.get(pid, 1) <= 1):
+                continue
+            if not self._free[sh]:
+                cache = self._reclaim_prefix(cache, sh, 1)
+            if not self._free[sh]:
+                raise OutOfPages(f"shard {sh}: CoW split of slot {slot} "
+                                 f"page {p} has no free page")
+            new = self._alloc_raw(sh)
+            cache = dict(cache)
+            for section, name, kind, stacked in self._groups():
+                if kind not in PAGED_KINDS:
+                    continue
+                leafd = dict(cache[section][name])
+                for kn in ("k", "v"):
+                    pool = leafd[f"{kn}_pool"]
+                    leafd[f"{kn}_pool"] = (
+                        pool.at[:, new].set(pool[:, pid]) if stacked
+                        else pool.at[new].set(pool[pid]))
+                cache[section] = {**cache[section], name: leafd}
+            self._decref(pid)
+            pages[p] = new
+            cache["page_table"] = cache["page_table"].at[slot, p].set(new)
+            self.n_cow_splits += 1
+        return cache
+
+    def _reclaim_prefix(self, cache: dict, sh: int, need: int):
+        """Retire up to ``need`` index-only prefix pages (refcount 1 — no
+        slot co-holds them) on shard ``sh``, least recently matched
+        first.  With a swap store attached each page is entropy-coded
+        into the store's **unpinned** LRU prefix cache (it faults back
+        bit-exactly on the next match); when the store cannot hold it —
+        or there is no store — the entry is dropped.  Either way the raw
+        page frees, so every allocation site can treat index-only pages
+        as reclaimable headroom."""
+        if self.prefix is None or need <= 0:
+            return cache
+        freed = 0
+        for key in self.prefix.lru_keys():
+            if freed >= need:
+                break
+            ent = self.prefix.get(key)
+            if (ent is None or ent < 0
+                    or ent // self.pages_per_shard != sh
+                    or self._ref.get(ent, 1) != 1):
+                continue
+            k = None
+            if self.swap is not None:
+                sp = self._encode_raw_page(cache, ent)
+                k = self.swap.put(sp, sh, pinned=False)
+            if k is not None:
+                self.prefix.put(key, -(k + 1))      # keeps LRU position
+                self.n_prefix_retired += 1
+            else:
+                self.prefix.drop(key)
+                self.n_prefix_dropped += 1
+            self._decref(ent)
+            freed += 1
+        return cache
+
+    def reclaimable_pages(self, shard: int = 0) -> int:
+        """Raw pages held only by the prefix index (refcount 1) on
+        ``shard`` — on-demand headroom the scheduler counts as available
+        when sizing admission."""
+        if self.prefix is None:
+            return 0
+        return sum(1 for e in self.prefix.entries()
+                   if e > 0 and e // self.pages_per_shard == shard
+                   and self._ref.get(e, 0) == 1)
+
+    def n_shared_pages(self) -> int:
+        """Raw index pages currently co-held by at least one slot."""
+        if self.prefix is None:
+            return 0
+        return sum(1 for e in self.prefix.entries()
+                   if e > 0 and self._ref.get(e, 0) > 1)
+
     # -- cold compression --------------------------------------------------
 
     def compress_cold_pages(self, cache: dict, slot: int, pos: int):
@@ -817,8 +1140,12 @@ class PagedKVCache:
         sh = self.shard_of_slot(slot)
         full = min(pos // self.page_size, len(self._slot_pages[slot]))
         for p in range(full):
+            # shared prefix pages (refcount > 1) stay raw: compressing
+            # the slot's copy would duplicate a page other holders still
+            # gather from, defeating the one-physical-copy invariant
             if (self._slot_pages[slot][p] >= self.n_pages
-                    or p in self._skip[slot]):
+                    or p in self._skip[slot]
+                    or self._ref.get(self._slot_pages[slot][p], 1) > 1):
                 continue
             if not self._cold_free[sh]:
                 return cache
@@ -864,7 +1191,7 @@ class PagedKVCache:
         entry = self.n_pages + cslot
         self._slot_pages[slot][p] = entry
         cache["page_table"] = cache["page_table"].at[slot, p].set(entry)
-        self._free[pid // self.pages_per_shard].append(pid)
+        self._decref(pid)
         self._cold_bytes[cslot] = total
         return cache, True
 
@@ -876,8 +1203,20 @@ class PagedKVCache:
 
         ``pages_in_use_per_shard`` counts raw+cold pages held by each batch
         shard's slots — the load-balance signal for sharded serving."""
-        raw = sum(1 for pages in self._slot_pages.values()
-                  for e in pages if GARBAGE_PAGE < e < self.n_pages)
+        # physical accounting: with prefix sharing a pid can appear in
+        # several slots' page lists (and in the index with no slot at
+        # all) but occupies device memory exactly once
+        raw_phys = {e for pages in self._slot_pages.values()
+                    for e in pages if GARBAGE_PAGE < e < self.n_pages}
+        prefix_resident = prefix_only = 0
+        if self.prefix is not None:
+            for e in self.prefix.entries():
+                if e > 0:
+                    prefix_resident += 1
+                    if self._ref.get(e, 0) == 1:
+                        prefix_only += 1
+                    raw_phys.add(e)
+        raw = len(raw_phys)
         cold = len(self._cold_bytes)
         swapped = sum(1 for pages in self._slot_pages.values()
                       for e in pages if e < 0)
@@ -908,6 +1247,16 @@ class PagedKVCache:
             "monolithic_bytes": self.max_batch * self.pages_per_slot
             * page_bytes,
         }
+        if self.prefix is not None:
+            out.update({
+                "prefix_index_blocks": len(self.prefix),
+                "prefix_resident_blocks": prefix_resident,
+                "prefix_reclaimable_pages": prefix_only,
+                "prefix_shared_pages": self.n_shared_pages(),
+                "prefix_retired_total": self.n_prefix_retired,
+                "prefix_dropped_total": self.n_prefix_dropped,
+                "prefix_cow_splits_total": self.n_cow_splits,
+            })
         if self.swap is not None:
             out.update(self.swap.stats())
         return out

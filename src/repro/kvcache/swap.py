@@ -84,13 +84,28 @@ class SwapStore:
     and the caller falls back to ``OutOfPages``.  ``n_shards`` sizes the
     per-shard byte ledgers (mesh serving keeps one device free list per
     batch shard; swap keeps the matching ledger so load imbalance is
-    visible in ``stats()``)."""
+    visible in ``stats()``).
+
+    Pages are **pinned** by default: they belong to a live (possibly
+    preempted) request and are never dropped by the store.  ``put(...,
+    pinned=False)`` stores an evictable page instead — the retired
+    shared-prefix cache of ``paged.PagedKVCache._reclaim_prefix``.  Under
+    capacity pressure the store silently evicts unpinned pages in LRU
+    order (oldest retirement first; a fault + re-retire refreshes
+    recency) to make room; only when no unpinned page is left does a
+    pinned put raise :class:`SwapExhausted` (an unpinned put returns
+    ``None`` instead — dropping the prefix is always legal, the caller
+    just forgets the index entry).  The paged allocator validates prefix
+    keys with :meth:`contains` at match time, so silent eviction needs
+    no callback."""
 
     def __init__(self, capacity_bytes: int | None = None, n_shards: int = 1):
         self.capacity_bytes = capacity_bytes
         self.n_shards = n_shards
         self._pages: dict[int, SwappedPage] = {}
         self._shard_of: dict[int, int] = {}
+        self._unpinned: dict[int, None] = {}    # ordered set: LRU order
+        self.n_prefix_evicted = 0               # unpinned pages dropped
         self._next_key = 0
         self.bytes_used = 0
         self.bytes_used_per_shard = [0] * n_shards
@@ -120,23 +135,53 @@ class SwapStore:
         self._registry.gauge("kvcache_swap_bytes_used").set(self.bytes_used)
         self._registry.gauge("kvcache_swap_pages").set(len(self._pages))
 
-    def put(self, page: SwappedPage, shard: int = 0) -> int:
-        """Store a swapped page; returns its opaque swap key."""
-        if (self.capacity_bytes is not None
-                and self.bytes_used + page.nbytes > self.capacity_bytes):
-            raise SwapExhausted(
-                f"swap store full: {self.bytes_used}B used + {page.nbytes}B "
-                f"> capacity {self.capacity_bytes}B")
+    def put(self, page: SwappedPage, shard: int = 0,
+            pinned: bool = True) -> int | None:
+        """Store a swapped page; returns its opaque swap key.
+
+        Over capacity, unpinned (prefix-cache) pages are evicted LRU-
+        first to make room; if the page still does not fit, a pinned put
+        raises :class:`SwapExhausted` and an unpinned put returns
+        ``None`` (the page is not stored)."""
+        if self.capacity_bytes is not None:
+            while (self.bytes_used + page.nbytes > self.capacity_bytes
+                   and self._unpinned):
+                victim = next(iter(self._unpinned))
+                self._evict_unpinned(victim)
+            if self.bytes_used + page.nbytes > self.capacity_bytes:
+                if not pinned:
+                    return None
+                raise SwapExhausted(
+                    f"swap store full: {self.bytes_used}B used + "
+                    f"{page.nbytes}B > capacity {self.capacity_bytes}B")
         key = self._next_key
         self._next_key += 1
         self._pages[key] = page
         self._shard_of[key] = shard
+        if not pinned:
+            self._unpinned[key] = None
         self.bytes_used += page.nbytes
         self.bytes_used_per_shard[shard] += page.nbytes
         self.swap_out_bytes += page.nbytes
         self.n_swap_out += 1
         self.sync_registry()
         return key
+
+    def _evict_unpinned(self, key: int) -> None:
+        """Silently drop an unpinned page (capacity pressure — the data
+        is a cache of a reproducible prefix, not request state)."""
+        page = self._pages.pop(key)
+        shard = self._shard_of.pop(key)
+        self._unpinned.pop(key, None)
+        self.bytes_used -= page.nbytes
+        self.bytes_used_per_shard[shard] -= page.nbytes
+        self.n_prefix_evicted += 1
+        self.sync_registry()
+
+    def contains(self, key: int) -> bool:
+        """Whether ``key`` is still resident (an unpinned page may have
+        been evicted since it was stored)."""
+        return key in self._pages
 
     def peek(self, key: int) -> SwappedPage:
         """Read without removing (capacity planning before a fault)."""
@@ -146,6 +191,7 @@ class SwapStore:
         """Remove and return a page on fault (counts swap-in traffic)."""
         page = self._pages.pop(key)
         shard = self._shard_of.pop(key)
+        self._unpinned.pop(key, None)
         self.bytes_used -= page.nbytes
         self.bytes_used_per_shard[shard] -= page.nbytes
         self.swap_in_bytes += page.nbytes
@@ -160,13 +206,18 @@ class SwapStore:
         if page is None:
             return
         shard = self._shard_of.pop(key)
+        self._unpinned.pop(key, None)
         self.bytes_used -= page.nbytes
         self.bytes_used_per_shard[shard] -= page.nbytes
         self.sync_registry()
 
     def stats(self) -> dict:
+        prefix_bytes = sum(self._pages[k].nbytes for k in self._unpinned)
         return {
             "swap_pages": len(self._pages),
+            "swap_prefix_pages": len(self._unpinned),
+            "swap_prefix_bytes": prefix_bytes,
+            "swap_prefix_evicted_total": self.n_prefix_evicted,
             "swap_bytes_used": self.bytes_used,
             "swap_bytes_per_shard": list(self.bytes_used_per_shard),
             "swap_capacity_bytes": self.capacity_bytes,

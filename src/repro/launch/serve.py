@@ -97,6 +97,16 @@ def main(argv=None):
                     help="prompt tokens spent on prefill per engine step "
                          "(bounds decode latency under long prompts); "
                          "default: one chunk.")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="cross-request prefix sharing: requests with a "
+                         "common page-aligned prompt prefix reference one "
+                         "physical copy of its KV pages (copy-on-write) "
+                         "and skip recomputing the matched positions.  "
+                         "Needs --prefill-chunk and a single batch shard.")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend the same N-token system prompt to every "
+                         "request (chat-style workload; makes "
+                         "--prefix-sharing hits visible in the report)")
     ap.add_argument("--draft", default=None, metavar="ARCH",
                     help="speculative decoding: draft-model architecture "
                          "from the registry (e.g. xlstm-350m drafting for "
@@ -182,8 +192,11 @@ def main(argv=None):
         params_c = params_fp8
 
     rng = np.random.default_rng(args.seed)
-    prompts = [rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12))
-               .tolist() for _ in range(args.requests)]
+    system = rng.integers(1, cfg.vocab_size,
+                          size=args.shared_prefix).tolist()
+    prompts = [system + rng.integers(0, cfg.vocab_size,
+                                     size=rng.integers(4, 12)).tolist()
+               for _ in range(args.requests)]
 
     cache_kw = dict(
         cache_mode="monolithic" if args.cache == "monolithic" else "paged",
@@ -194,6 +207,7 @@ def main(argv=None):
         preemption=args.preemption,
         prefill_chunk=args.prefill_chunk,
         prefill_budget=args.prefill_budget or None,
+        prefix_sharing=args.prefix_sharing,
     )
     if args.draft:
         dcfg = get(args.draft)
@@ -280,6 +294,17 @@ def main(argv=None):
                   f"{eng.n_interleaved_steps} interleaved steps, "
                   f"{eng.prefill_compile_count()} prefill compilation(s) "
                   f"across all prompt lengths")
+        if eng.prefix_sharing:
+            sp = eng.paged.stats()
+            hits = tel.registry.get("prefix_hit_total")
+            miss = tel.registry.get("prefix_miss_total")
+            print(f"[serve] prefix sharing: "
+                  f"{hits.value if hits else 0} hits / "
+                  f"{miss.value if miss else 0} misses, index "
+                  f"{sp['prefix_index_blocks']} blocks "
+                  f"({sp['prefix_resident_blocks']} resident), "
+                  f"{sp['prefix_retired_total']} retired to swap, "
+                  f"{sp['prefix_cow_splits_total']} CoW splits")
         if "peak_swap_bytes" in s:
             print(f"[serve] swap tier: peak host-resident "
                   f"{s['peak_swap_bytes'] / 1e6:.3f}MB, traffic out/in "

@@ -2,7 +2,8 @@
 
 Features exercised here (and in tests/test_fault_tolerance.py):
   * auto-resume from the latest valid checkpoint (atomic + checksummed);
-  * async checkpoint writes every ``save_every`` steps;
+  * async checkpoint writes every ``save_every`` steps, drained at each
+    save point so periodic checkpoints are durability barriers;
   * preemption safety: SIGTERM/SIGINT triggers a final synchronous save;
   * straggler monitor: slow-step alarms trigger an eager async checkpoint
     (and at cluster scale, a scheduler swap — runtime/monitor.py);
@@ -122,10 +123,17 @@ def main(argv=None):
         if i and i % args.save_every == 0:
             mgr.save_async(i, {"params": params, "opt": opt_state,
                                "step": jnp.asarray(i, jnp.int32)})
+            # periodic saves are the durability boundary of the restart
+            # contract: a machine loss anywhere in (i, i+save_every] must
+            # resume from step i, so drain the write (and any queued
+            # eager saves) before advancing — write errors surface here
+            # instead of being silently lost
+            mgr.wait()
         if preempted["flag"]:
             print(f"[train] preemption signal at step {i}: final save")
             break
 
+    mgr.wait()   # drain queued async writes before the final sync save
     mgr.save_sync(i, {"params": params, "opt": opt_state,
                       "step": jnp.asarray(i, jnp.int32)})
     mgr.close()

@@ -41,6 +41,11 @@ class StragglerMonitor:
     window: int = 50
     threshold_mads: float = 6.0
     min_samples: int = 10
+    # absolute floor: a robust z over a millisecond-scale MAD flags pure
+    # scheduler jitter as a straggler (observed: 5-10 ms steps alarming at
+    # z=7-13 and flooding the trainer's eager-checkpoint path) — a step
+    # must also be at least this slow in absolute terms to alarm
+    min_seconds: float = 0.05
     ewma_alpha: float = 0.05
     _times: deque = field(default_factory=lambda: deque(maxlen=200))
     # None = no sample yet; a legitimate 0.0-second first sample (clock
@@ -70,7 +75,8 @@ class StragglerMonitor:
         else:
             z = 0.0
         is_straggler = (len(window) >= self.min_samples
-                        and z > self.threshold_mads)
+                        and z > self.threshold_mads
+                        and dt >= self.min_seconds)
         self._times.append(dt)
         self._ewma = (dt if self._ewma is None
                       else (1 - self.ewma_alpha) * self._ewma

@@ -199,6 +199,7 @@ class GenerationEngine:
                  n_cold_slots: int | None = None, kv_monitor=None,
                  swap_bytes: int | None = None, preemption: bool = True,
                  prefill_chunk: int = 0, prefill_budget: int | None = None,
+                 prefix_sharing: bool = False,
                  draft_params=None, draft_cfg: ArchConfig | None = None,
                  spec_k: int = 4, telemetry=None):
         """``mesh``: optional ``jax.sharding.Mesh``; the paged cache shards
@@ -221,6 +222,20 @@ class GenerationEngine:
         chunk).  Chunked prefill needs the paged cache, an architecture
         whose every layer pages, and a mesh without a model axis —
         otherwise the engine warns and prefills whole prompts.
+
+        ``prefix_sharing`` enables **cross-request prefix sharing** on
+        top of chunked prefill: page-aligned prompt-prefix blocks are
+        content-addressed in a ``PrefixIndex``, admission increfs the
+        matching physical pages instead of recomputing them (one
+        physical copy serves every holder, copy-on-write protected) and
+        prefill skips the matched positions — TTFT of a hit is the
+        unmatched-suffix cost.  The token stream is byte-identical to
+        serving without sharing: matched pages hold exactly the bits a
+        fresh chunked prefill of the same tokens would write (chunk
+        partitioning never changes per-position K/V bits), and full
+        prompt blocks are never written again while shared.  Requires
+        chunked prefill and a single batch shard; otherwise the engine
+        warns and serves unshared.
 
         ``draft_params``/``draft_cfg`` attach a **draft model** for
         speculative decoding with exact rejection sampling
@@ -311,6 +326,19 @@ class GenerationEngine:
                 chunk = 0
         self.prefill_chunk = chunk
         self.prefill_budget = max(prefill_budget or chunk, 1) if chunk else 0
+        # cross-request prefix sharing rides the chunked-prefill path
+        # (admission sets cur_len to the matched length and chunks resume
+        # at the boundary — zero new compilations) and needs shard-local
+        # pages to be reachable from every slot (n_shards == 1)
+        self.prefix_sharing = bool(prefix_sharing)
+        if self.prefix_sharing and (not chunk or n_shards != 1):
+            warnings.warn(
+                "prefix_sharing needs chunked prefill (prefill_chunk > 0, "
+                "with its paged-cache requirements) and a single batch "
+                "shard; serving without sharing", stacklevel=2)
+            self.prefix_sharing = False
+        if self.prefix_sharing:
+            self.paged.enable_prefix_sharing()
         self._prefill_pos: dict[int, int] = {}  # slot -> prompt tokens done
         self._prefill_order: list[int] = []     # admission order (FIFO)
         self._stalled_ids: set = set()          # self-preempted this step
@@ -424,6 +452,9 @@ class GenerationEngine:
         if self.prefill_chunk:
             tel.registry.gauge("serving_prefilling_slots").set(
                 len(self._prefill_pos))
+        if self.prefix_sharing:
+            tel.registry.gauge("prefix_shared_pages").set(
+                self.paged.n_shared_pages())
         if tel.tracer is not None:
             tel.tracer.counter("serving_queue_depth", q)
             tel.tracer.counter("serving_active_slots", act)
@@ -487,13 +518,29 @@ class GenerationEngine:
         (``Scheduler.admission_grant`` — the same count ``pick`` tested
         against) and enter the prefill phase; no prompt compute yet,
         chunks run under the step's token budget in
-        :func:`_prefill_phase`."""
-        self.cache = self.paged.admit_slot(
-            self.cache, slot, self.scheduler.admission_grant(req))
-        self._host_len[slot] = 0
-        self._prefill_pos[slot] = 0
+        :func:`_prefill_phase`.
+
+        With prefix sharing, admission matches the prompt against the
+        prefix index first: matched pages are adopted by reference
+        (``admit_shared``) and prefill resumes at the match boundary —
+        the matched positions are never recomputed."""
+        grant = self.scheduler.admission_grant(req)
+        matched = 0
+        if self.prefix_sharing:
+            self.cache, matched = self.paged.admit_shared(
+                self.cache, slot, req.prompt, grant)
+        else:
+            self.cache = self.paged.admit_slot(self.cache, slot, grant)
+        self._host_len[slot] = matched
+        self._prefill_pos[slot] = matched
         self._prefill_order.append(slot)
         self.slots[slot] = req
+        if self.tel is not None and self.prefix_sharing:
+            reg = self.tel.registry
+            reg.counter("prefix_hit_total" if matched
+                        else "prefix_miss_total").inc()
+            if matched:
+                reg.counter("prefix_match_tokens_total").inc(matched)
         if self.tel is not None:
             sub = self._submit_t.get(req.id)
             if sub is not None:
@@ -937,6 +984,13 @@ class GenerationEngine:
             n = len(part)
             if not self._ensure_prefill(slot, pos + n - 1):
                 return spent                    # self-preempted: requeued
+            if self.prefix_sharing:
+                # CoW safety invariant: block-aligned matching means the
+                # chunk write starts at the match boundary, so this is
+                # structurally a no-op — but any shared page in the write
+                # window must split before the in-graph scatter lands
+                self.cache = self.paged.make_writable(self.cache, slot,
+                                                      pos, pos + n - 1)
             toks = jnp.asarray(list(part) + [0] * (C - n),
                                jnp.int32)[None, :]
             cache_in, stash = self._maybe_strip()
@@ -947,6 +1001,10 @@ class GenerationEngine:
                           else new_cache)
             self._prefill_pos[slot] = pos + n
             self._host_len[slot] = pos + n
+            if self.prefix_sharing:
+                # publish the slot's newly completed prompt blocks so
+                # concurrent and future requests share them
+                self.paged.register_prefix(slot, req.prompt, pos + n)
             self.n_chunks += 1
             self.n_chunk_tokens += n
             spent += n
@@ -1044,6 +1102,14 @@ class GenerationEngine:
             for s in active:   # grow page lists to cover this step's write
                 if self.slots[s] is not None and s not in self._prefill_pos:
                     self._ensure_with_pressure(s)
+                    if self.prefix_sharing:
+                        # CoW safety invariant for the decode write (a
+                        # structural no-op: decode writes land past the
+                        # prompt, and full prompt blocks are the only
+                        # shareable ones)
+                        self.cache = self.paged.make_writable(
+                            self.cache, s, self._host_len[s],
+                            self._host_len[s])
             active = [s for s in range(self.max_batch)
                       if self.slots[s] is not None
                       and s not in self._prefill_pos]

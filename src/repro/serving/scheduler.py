@@ -158,6 +158,10 @@ class Scheduler:
         a decode-phase resume (its prompt is already in its pages)."""
         if isinstance(item, Preempted):
             return item.prefill_tokens_left
+        if self.paged is not None and self.paged.prefix is not None:
+            # prefix-shared admission skips matched positions entirely —
+            # only the unmatched suffix costs prefill budget (and TTFT)
+            return len(item.prompt) - self.paged.match_prefix(item.prompt)
         return len(item.prompt)
 
     def admission_grant(self, req) -> int:
@@ -171,11 +175,20 @@ class Scheduler:
         prefilling request itself).  Without preemption the whole-prompt
         grant is required up front, exactly like the whole-prompt
         engine: admitting on a first-chunk grant with no way to evict
-        could wedge a later chunk mid-flight."""
+        could wedge a later chunk mid-flight.
+
+        With prefix sharing, matched blocks are *not* part of the grant:
+        the engine's ``admit_shared`` increfs them instead of allocating,
+        so the grant covers only the unmatched suffix (the first chunk
+        of it, or all of it without preemption)."""
+        matched = 0
+        if self.paged is not None and self.paged.prefix is not None:
+            matched = self.paged.match_prefix(req.prompt)
         if self.chunk_tokens and self._can_preempt():
             return self.paged.pages_for_prefix(
-                min(self.chunk_tokens, len(req.prompt)))
-        return self.paged.pages_needed(len(req.prompt))
+                min(self.chunk_tokens, len(req.prompt) - matched))
+        return (self.paged.pages_needed(len(req.prompt))
+                - matched // self.paged.page_size)
 
     def _need_now(self, item) -> int:
         """Raw pages the item needs resident to start on a slot."""
@@ -191,7 +204,11 @@ class Scheduler:
         to preempt (it cannot swap its own history)."""
         if self.paged is None:
             return True
-        if self._need_now(item) > self.paged.free_pages_per_shard[shard]:
+        # index-only prefix pages (refcount 1) are reclaimable on demand
+        # by every allocation site, so they count as available here
+        avail = (self.paged.free_pages_per_shard[shard]
+                 + self.paged.reclaimable_pages(shard))
+        if self._need_now(item) > avail:
             return False
         req = item.req if isinstance(item, Preempted) else item
         worst = self.paged.pages_worst_case(len(req.prompt),

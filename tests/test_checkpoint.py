@@ -110,6 +110,84 @@ def test_elastic_restore_onto_different_sharding(tmp_path):
                                   np.asarray(t["params"]["w"]))
 
 
+def test_close_surfaces_pending_write_errors(tmp_path):
+    """A failed async write queued right before close() must raise, not
+    be silently appended to ._errors and dropped."""
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep=2)
+    mgr.save_async(0, _tree(0))
+    mgr.wait()
+    # an unserializable leaf makes the worker's save_tree raise
+    bad = {"w": np.array([object()], dtype=object)}
+    mgr.save_async(1, bad)
+    with pytest.raises(IOError, match="async checkpoint writes"):
+        mgr.close()
+
+
+def test_available_steps_skips_stray_entries(tmp_path):
+    """A non-numeric step_foo/ dir must not take down restore."""
+    from repro.checkpoint.manager import available_steps
+    d = str(tmp_path)
+    save_tree(_tree(4), d, step=4)
+    stray = os.path.join(d, "step_foo")
+    os.makedirs(stray)
+    with open(os.path.join(stray, "manifest.json"), "w") as f:
+        f.write("{}")
+    assert available_steps(d) == [4]
+    r, step = restore_tree(d, _tree())
+    assert step == 4 and int(r["step"]) == 4
+
+
+@pytest.mark.slow
+def test_concurrent_writers_do_not_destroy_each_other(tmp_path):
+    """Interleaved save_async / save_sync / GC / restore on one directory:
+    the regression drill for the tmp-dir race (worker GC used to rmtree
+    the sync writer's half-written tmp)."""
+    import threading
+
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep=3)
+    errors = []
+
+    def sync_writer():
+        try:
+            for s in range(30, 45):
+                mgr.save_sync(s, _tree(s))
+        except Exception as e:  # noqa: BLE001 — collected for the assert
+            errors.append(repr(e))
+
+    def restorer():
+        try:
+            for _ in range(10):
+                restore_tree(d, _tree())
+        except Exception as e:  # noqa: BLE001
+            errors.append(repr(e))
+
+    threads = [threading.Thread(target=sync_writer),
+               threading.Thread(target=restorer)]
+    for s in range(15):
+        mgr.save_async(s, _tree(s))  # each worker write runs _gc() too
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    mgr.wait()
+    mgr.close()
+    assert not errors, errors
+    # every surviving checkpoint restores cleanly
+    from repro.checkpoint.manager import available_steps
+    steps = available_steps(d)
+    assert steps, "no checkpoint survived the stress run"
+    r, step = restore_tree(d, _tree())
+    assert step == max(steps)
+    assert int(r["step"]) == step
+    # no unowned tmp litter once all writers are done
+    mgr2 = CheckpointManager(d, keep=3)
+    mgr2.save_sync(99, _tree(99))
+    mgr2.close()
+    assert not glob.glob(os.path.join(d, "*.tmp*"))
+
+
 @pytest.mark.slow
 def test_train_failure_restart_continuity(tmp_path):
     """Kill the trainer mid-run (os._exit), restart, and verify the run

@@ -1,0 +1,305 @@
+"""Cross-request prefix sharing (ISSUE 8): refcounted CoW pages + the
+content-addressed prefix index.
+
+Acceptance bar: serving with sharing on is **byte-identical** to serving
+with sharing off (and to the monolithic reference) — including runs that
+retire shared prefixes to swap and fault them back, and runs that
+preempt mid-flight — while N requests with a common prompt prefix hold
+ONE physical copy of its pages (asserted on the refcounts and the page
+tables, not just the stats).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get, smoke_variant
+from repro.kvcache import OutOfPages, PagedKVCache, SwapStore
+from repro.models import model as M
+from repro.serving import GenerationEngine, Request
+
+try:
+    from hypothesis import given, strategies as st
+except ImportError:          # tier-1 may run without hypothesis
+    given = None
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke_variant(get("qwen3-8b"))
+    return M.init_params(jax.random.PRNGKey(0), cfg), cfg
+
+
+def _serve(params, cfg, reqs, *, max_batch=3, max_len=64, **kw):
+    eng = GenerationEngine(params, cfg, max_batch=max_batch,
+                           max_len=max_len, **kw)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done for r in reqs)
+    return [r.out_tokens for r in reqs], eng
+
+
+def _chat_requests(prefix, suffixes, max_new=6, id_base=20_000):
+    """A chat-style stream: every request shares ``prefix`` (the system
+    prompt) and appends its own suffix."""
+    return [Request(prompt=list(prefix) + list(sfx), max_new_tokens=max_new,
+                    id=id_base + i)
+            for i, sfx in enumerate(suffixes)]
+
+
+def _stream(make):
+    """Fresh Request objects for each engine (they accumulate tokens)."""
+    return make()
+
+
+# --------------------------------------------------------------------------
+# bit-identity: shared vs unshared
+# --------------------------------------------------------------------------
+
+
+def test_prefix_shared_serving_bit_identical(model):
+    """The acceptance anchor: a common-prefix workload served with
+    sharing on emits byte-identical tokens to sharing off, requests
+    really hit the index, and prefill work shrinks by the matched
+    tokens."""
+    params, cfg = model
+    prefix = list(range(1, 17))                     # 16 tokens = 2 pages
+    suffixes = [[40 + i, 50 + i, 60 + i] for i in range(4)] + [[70]]
+
+    def make():
+        return _chat_requests(prefix, suffixes)
+
+    kw = dict(cache_mode="paged", page_size=8, prefill_chunk=8)
+    off, eng_off = _serve(params, cfg, _stream(make), **kw)
+    on, eng_on = _serve(params, cfg, _stream(make), prefix_sharing=True,
+                        **kw)
+    assert on == off
+    assert eng_on.prefix_sharing and not eng_off.prefix_sharing
+    # the first request misses; later ones match both full-prefix blocks
+    assert len(eng_on.paged.prefix) >= 2
+    # matched positions were never recomputed: chunk-token totals differ
+    # by exactly 16 tokens per hit
+    assert eng_on.n_chunk_tokens < eng_off.n_chunk_tokens
+    st_p = eng_on.paged.stats()
+    assert st_p["prefix_cow_splits_total"] == 0     # structurally unreachable
+    # all requests finished: index-only pages remain, no slot pages leak
+    assert st_p["prefix_shared_pages"] == 0
+    assert st_p["prefix_reclaimable_pages"] == st_p["prefix_resident_blocks"]
+
+
+def test_prefix_sharing_one_physical_copy(model):
+    """While N common-prefix requests are in flight, their page tables
+    point at the SAME physical pages, whose refcount equals the holder
+    count — one copy in device memory, verified on the allocator."""
+    params, cfg = model
+    prefix = list(range(1, 17))                     # 2 full pages of 8
+    eng = GenerationEngine(params, cfg, max_batch=4, max_len=64,
+                           cache_mode="paged", page_size=8,
+                           prefill_chunk=32, prefix_sharing=True)
+    warm = Request(prompt=prefix + [99], max_new_tokens=2, id=21_000)
+    eng.submit(warm)
+    eng.run()
+    assert len(eng.paged.prefix) == 2               # both blocks published
+    base = eng.paged.stats()["pages_in_use"]
+
+    reqs = [Request(prompt=prefix + [50 + i], max_new_tokens=8,
+                    id=21_001 + i) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    slots = [eng.slots.index(r) for r in reqs]
+    rows = [eng.paged._slot_pages[s][:2] for s in slots]
+    assert rows[0] == rows[1] == rows[2]            # same physical pages
+    for pid in rows[0]:
+        # 3 slots + the index hold the page; it is counted once
+        assert eng.paged._ref[pid] == 4
+    assert eng.paged.n_shared_pages() == 2
+    # physical accounting: 3 in-flight requests with a 17-token prompt
+    # each cost 2 shared + 3x1 own pages, not 3x3
+    assert eng.paged.stats()["pages_in_use"] <= base + 3 + 1
+    eng.run()
+    for r in reqs:
+        assert r.done and r.out_tokens == warm_ref(params, cfg, r)
+
+
+def warm_ref(params, cfg, req):
+    """Monolithic greedy reference for one request."""
+    toks = list(req.prompt)
+    for _ in range(req.max_new_tokens):
+        logits, _ = M.forward(params, cfg,
+                              jnp.asarray(toks, jnp.int32)[None])
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return toks[len(req.prompt):]
+
+
+def test_prefix_retire_to_swap_and_fault_back_bit_identical(model):
+    """Under page pressure the shared prefix retires into the swap
+    tier's unpinned LRU cache and a later match faults it back — tokens
+    stay byte-identical and the retire/fault counters prove the path
+    ran."""
+    params, cfg = model
+    prefix = list(range(1, 17))
+    # tiny pool (capacity 6): the 30-token prompt needs 5 pages, so with
+    # the 2-page idle prefix resident the allocator must reclaim
+    kw = dict(cache_mode="paged", page_size=8, n_pages=7,
+              prefill_chunk=8, swap_bytes=1 << 28, max_batch=2)
+
+    def make():
+        return [Request(prompt=prefix + [40], max_new_tokens=4, id=22_000),
+                Request(prompt=[90 + i for i in range(30)],
+                        max_new_tokens=8, id=22_001),
+                Request(prompt=prefix + [41], max_new_tokens=4, id=22_002)]
+
+    off, _ = _serve(params, cfg, _stream(make), **kw)
+    # serialize admission so the index is idle when the long prompt lands
+    on_reqs = _stream(make)
+    eng = GenerationEngine(params, cfg, max_len=64, prefix_sharing=True,
+                           **kw)
+    for r in on_reqs:
+        eng.submit(r)
+        eng.run()
+    assert [r.out_tokens for r in on_reqs] == off
+    assert eng.paged.n_prefix_retired > 0           # pressure retired it
+    assert eng.paged.swap.n_prefix_evicted == 0     # store had room
+    # the third request faulted the retired block back into the pool
+    assert eng.paged.stats()["prefix_resident_blocks"] >= 1
+
+
+def test_prefix_sharing_with_preemption_bit_identical(model):
+    """Sharing composes with the oversubscribed swap/preemption tier:
+    mixed-priority common-prefix workload, sized to preempt, byte-equal
+    to the monolithic engine."""
+    params, cfg = model
+    prefix = list(range(1, 9))                      # one full page of 8
+    wl = [(3, 12, 1), (8, 10, 2), (1, 12, 0), (6, 8, 0)]
+    rng = np.random.default_rng(3)
+    sfx = [rng.integers(1, cfg.vocab_size, size=n).tolist()
+           for n, _, _ in wl]
+
+    def make():
+        return [Request(prompt=prefix + sfx[i], max_new_tokens=mn,
+                        priority=pr, id=23_000 + i)
+                for i, (_, mn, pr) in enumerate(wl)]
+
+    mono, _ = _serve(params, cfg, _stream(make), max_batch=2,
+                     cache_mode="monolithic")
+    on, eng = _serve(params, cfg, _stream(make), max_batch=2,
+                     cache_mode="paged", page_size=8, n_pages=5,
+                     compress_cold=True, n_cold_slots=1,
+                     swap_bytes=1 << 28, prefill_chunk=4,
+                     prefix_sharing=True)
+    assert on == mono
+    assert eng.scheduler.n_preempted > 0            # the point of the sizing
+
+
+# --------------------------------------------------------------------------
+# refcounted allocator: property test
+# --------------------------------------------------------------------------
+
+
+def _check_invariants(pkv):
+    """The audit invariants of the refcounted page allocator."""
+    cap = sum(pkv.shard_capacity(k) for k in range(pkv.n_shards))
+    free = [pid for f in pkv._free for pid in f]
+    assert len(free) == len(set(free)), "free list has duplicates"
+    assert not (set(free) & set(pkv._ref)), "freed page still referenced"
+    # conservation: every raw page is either free or refcounted-live
+    assert len(free) + len(pkv._ref) == cap, (len(free), len(pkv._ref))
+    # refcount == holder count (slots' page lists + the prefix index)
+    holders = {}
+    for pages in pkv._slot_pages.values():
+        for e in pages:
+            if 0 < e < pkv.n_pages:
+                holders[e] = holders.get(e, 0) + 1
+    if pkv.prefix is not None:
+        for e in pkv.prefix.entries():
+            if e > 0:
+                holders[e] = holders.get(e, 0) + 1
+    assert holders == pkv._ref, (holders, pkv._ref)
+
+
+_PREFIX_POOL = [tuple(range(1, 10)), tuple(range(1, 18)),
+                tuple(range(1, 26)), tuple([5] * 17),
+                tuple(range(100, 121))]
+
+
+def _random_allocator_walk(seed):
+    """Random admit_shared / register / CoW / evict / fault / release /
+    reclaim sequences never double-free, never leak, and never free a
+    page another holder still references — invariant-checked after
+    every operation."""
+    rng = np.random.default_rng(seed)
+    cfg = smoke_variant(get("qwen3-8b"))
+    pkv = PagedKVCache(cfg, 4, 32, dtype=jnp.float32, page_size=8,
+                       n_pages=10)
+    pkv.enable_prefix_sharing()
+    pkv.attach_swap(SwapStore(capacity_bytes=1 << 24))
+    cache = pkv.init_cache()
+    live = {}                            # slot -> prompt
+
+    def pick(xs):
+        return xs[int(rng.integers(len(xs)))]
+
+    for _ in range(int(rng.integers(8, 25))):
+        ops = ["admit", "reclaim"]
+        if live:
+            ops += ["register", "cow", "evict", "fault", "release"]
+        op = pick(ops)
+        if op == "admit":
+            free_slots = [s for s in range(4) if s not in live]
+            if not free_slots:
+                continue
+            slot = pick(free_slots)
+            prompt = list(pick(_PREFIX_POOL))
+            try:
+                cache, _ = pkv.admit_shared(cache, slot, prompt, 2)
+            except OutOfPages:
+                continue
+            live[slot] = prompt
+        elif op == "register":
+            slot = pick(sorted(live))
+            pkv.register_prefix(slot, live[slot],
+                                int(rng.integers(len(live[slot]) + 1)))
+        elif op == "cow":
+            slot = pick(sorted(live))
+            hi = len(pkv._slot_pages[slot]) * pkv.page_size - 1
+            try:
+                cache = pkv.make_writable(cache, slot, 0, hi)
+            except OutOfPages:
+                pass
+        elif op == "evict":
+            cache = pkv.evict(cache, pick(sorted(live)))
+        elif op == "fault":
+            try:
+                cache = pkv.fault(cache, pick(sorted(live)))
+            except OutOfPages:
+                pass
+        elif op == "release":
+            slot = pick(sorted(live))
+            cache = pkv.release(cache, slot)
+            del live[slot]
+        elif op == "reclaim":
+            cache = pkv._reclaim_prefix(cache, 0,
+                                        int(rng.integers(1, 5)))
+        _check_invariants(pkv)
+    for slot in sorted(live):
+        cache = pkv.release(cache, slot)
+    _check_invariants(pkv)
+    # draining the index returns every raw page to the free list
+    cache = pkv._reclaim_prefix(cache, 0, pkv.n_pages)
+    _check_invariants(pkv)
+    assert not any(e > 0 for e in pkv.prefix.entries())
+    assert pkv.free_pages == pkv.n_pages - 1
+
+
+def test_refcount_invariants_fixed_seeds():
+    """Tier-1 anchor for the allocator property (no hypothesis needed)."""
+    for seed in (0, 1, 7, 123):
+        _random_allocator_walk(seed)
+
+
+if given is not None:
+    @given(st.integers(0, 2**31 - 1))
+    def test_refcount_invariants_random_ops(seed):
+        _random_allocator_walk(seed)
