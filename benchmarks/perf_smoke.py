@@ -24,6 +24,11 @@ the first point of the repo's benchmark trajectory:
     plus the hit requests' TTFT against the no-sharing baseline
     (strictly-below is asserted inside; one physical prefix copy and
     bit-identity too);
+  * ``frontend`` — the bursty trace-replay through the async front end
+    + router over 2 engine replicas (``load_replay.run``): streamed
+    TTFT p50/p95 (submit → first token on the stream), throughput, and
+    the shed rate / completion counts under the spike (deterministic —
+    gated as bands; async-vs-sync bit-identity is asserted inside);
   * ``decode`` — the ECF8 decode microbench at its smallest shape
     (``decode_microbench``): MB/s of the jnp and fixed-rate paths.
 
@@ -66,6 +71,11 @@ GATES = {
     ("prefix", "chunk_tokens_shared"): "count",
     ("prefix", "cow_splits"): "count",
     ("prefix", "ttft_hit_shared_s"): "lower",
+    ("frontend", "ttft_p50_s"): "lower",
+    ("frontend", "ttft_p95_s"): "lower",
+    ("frontend", "tok_per_s"): "higher",
+    ("frontend", "shed_rate"): "band",
+    ("frontend", "n_completed"): "band",
     ("decode", "tpu_jnp_MBps"): "higher",
     ("decode", "fr_MBps"): "higher",
 }
@@ -100,7 +110,7 @@ def collect(verbose: bool = True, repeats: int = 3,
     process-wide jit cache by design).  ``trace_out`` saves the
     oversubscribed run's Chrome-trace JSON (the CI artifact next to
     ``BENCH_serving.json``)."""
-    from benchmarks import decode_microbench, kvcache_bench
+    from benchmarks import decode_microbench, kvcache_bench, load_replay
     probe = machine_probe_mflops()
     decs = [decode_microbench.run(verbose=verbose and i == 0,
                                   sizes=(1 << 16,))[0]
@@ -116,6 +126,9 @@ def collect(verbose: bool = True, repeats: int = 3,
     prefs = [kvcache_bench.run_prefix_shared(verbose=verbose and i == 0)
              for i in range(repeats)]
     pref = min(prefs, key=lambda r: r["ttft_hit_shared_s"])
+    fronts = [load_replay.run(verbose=verbose and i == 0)
+              for i in range(repeats)]
+    front = fronts[0]           # counts are deterministic across repeats
     return {
         "schema": 1,
         "probe_mflops": probe,
@@ -179,6 +192,20 @@ def collect(verbose: bool = True, repeats: int = 3,
                                         for p in prefs),
             "ttft_hit_shared_s": pref["ttft_hit_shared_s"],
             "ttft_speedup": max(p["ttft_speedup"] for p in prefs),
+        },
+        "frontend": {
+            # the shed set / completion counts / prefix hits are
+            # deterministic (tick-based replay); the latency and
+            # throughput stats are best-of like every timed bench
+            "n_requests": front["n_requests"],
+            "n_replicas": front["n_replicas"],
+            "n_completed": front["n_completed"],
+            "n_shed": front["n_shed"],
+            "shed_rate": front["shed_rate"],
+            "prefix_hits": front["prefix_hits"],
+            "tok_per_s": max(f["tok_per_s"] for f in fronts),
+            "ttft_p50_s": min(f["ttft_p50_s"] for f in fronts),
+            "ttft_p95_s": min(f["ttft_p95_s"] for f in fronts),
         },
         "decode": {
             "tpu_jnp_MBps": dec["tpu_jnp_MBps"],
@@ -259,6 +286,13 @@ def main(argv=None):
           f"no-sharing {pfx['ttft_hit_nosharing_s'] * 1e3:.0f} ms "
           f"({pfx['ttft_speedup']:.2f}x, "
           f"{pfx['match_tokens']} prompt tokens never recomputed)")
+    fr = measured["frontend"]
+    print(f"[perf-smoke] frontend replay {fr['n_completed']}/"
+          f"{fr['n_requests']} completed on {fr['n_replicas']} replicas "
+          f"({fr['shed_rate']:.0%} shed), {fr['tok_per_s']:.1f} tok/s "
+          f"streamed, TTFT p50/p95 {fr['ttft_p50_s'] * 1e3:.0f}/"
+          f"{fr['ttft_p95_s'] * 1e3:.0f} ms, "
+          f"{fr['prefix_hits']} prefix hits")
     print(f"[perf-smoke] telemetry overhead "
           f"{srv['telemetry_overhead_frac']:.1%} tok/s "
           f"(target < 2%; the published chunked numbers come from the "

@@ -23,7 +23,7 @@ from repro.configs import get, smoke_variant
 from repro.core.store import compress_tree
 from repro.models import model as M
 from repro.runtime.monitor import KVCacheMonitor
-from repro.serving import GenerationEngine, Request
+from repro.serving import EngineConfig, GenerationEngine, Request
 
 MAX_BATCH, MAX_LEN, PAGE = 4, 96, 16
 
@@ -42,8 +42,8 @@ def make_requests(vocab_size: int, seed: int = 0):
 
 def run_stream(params, cfg, reqs, **cache_kw):
     mon = KVCacheMonitor()
-    eng = GenerationEngine(params, cfg, max_batch=MAX_BATCH, max_len=MAX_LEN,
-                           kv_monitor=mon, **cache_kw)
+    eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=MAX_BATCH, max_len=MAX_LEN,
+                           kv_monitor=mon, **cache_kw))
     for r in reqs:
         eng.submit(r)
     t0 = time.time()

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from dataclasses import replace
 
 import numpy as np
 import jax
@@ -33,7 +34,8 @@ from repro.models import model as M
 from repro.runtime.monitor import KVCacheMonitor
 from repro.runtime.trace_export import export_chrome_trace
 from repro.runtime.tracing import JaxProfilerHook
-from repro.serving import GenerationEngine, Request
+from repro.serving import EngineConfig, EngineConfigError, \
+    GenerationEngine, Request
 from repro.serving.telemetry import Telemetry, serving_report_line
 
 
@@ -119,10 +121,12 @@ def main(argv=None):
                          "identical when sampling.  Needs --cache paged/"
                          "paged-compressed, an all-attention target and "
                          "whole-prompt prefill.")
-    ap.add_argument("--spec-k", type=int, default=4,
-                    help="drafted tokens per speculative round")
-    ap.add_argument("--draft-seed", type=int, default=1,
-                    help="PRNG seed for the synthesized draft weights")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="drafted tokens per speculative round "
+                         "(default 4; an error without --draft)")
+    ap.add_argument("--draft-seed", type=int, default=None,
+                    help="PRNG seed for the synthesized draft weights "
+                         "(default 1; an error without --draft)")
     ap.add_argument("--mesh", default=None, metavar="D[xM]",
                     help="serve on a (data=D[, model=M]) device mesh, e.g. "
                          "'2' or '2x2'.  Needs D*M visible devices (on CPU "
@@ -172,6 +176,19 @@ def main(argv=None):
         mesh = Mesh(np.asarray(jax.devices()[:n_dev]).reshape(dims), axes)
         print(f"[serve] mesh {dict(zip(axes, dims))}")
 
+    # the one CLI -> engine-config mapping: strict validation here
+    # surfaces ignored flags (--spec-k without --draft) and incompatible
+    # feature requests (--prefix-sharing with --draft, chunked prefill
+    # on a model mesh axis, ...) *before* any weights are synthesized
+    dcfg = None
+    if args.draft:
+        dcfg = smoke_variant(get(args.draft)) if args.smoke \
+            else get(args.draft)
+    try:
+        ecfg = EngineConfig.from_args(args, cfg, mesh=mesh, draft_cfg=dcfg)
+    except EngineConfigError as e:
+        ap.error(str(e))
+
     params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
     # FP8 baseline: the paper compresses released FP8 checkpoints
     params_fp8 = fp8_cast_tree(params, min_elems=4096)
@@ -198,31 +215,17 @@ def main(argv=None):
                                      size=rng.integers(4, 12)).tolist()
                for _ in range(args.requests)]
 
-    cache_kw = dict(
-        cache_mode="monolithic" if args.cache == "monolithic" else "paged",
-        page_size=args.page_size,
-        n_pages=args.n_pages,
-        compress_cold=args.cache == "paged-compressed",
-        swap_bytes=args.swap_bytes,
-        preemption=args.preemption,
-        prefill_chunk=args.prefill_chunk,
-        prefill_budget=args.prefill_budget or None,
-        prefix_sharing=args.prefix_sharing,
-    )
     if args.draft:
-        dcfg = get(args.draft)
-        if args.smoke:
-            dcfg = smoke_variant(dcfg)
-        dparams = M.init_params(jax.random.PRNGKey(args.draft_seed), dcfg)
-        cache_kw.update(draft_params=dparams, draft_cfg=dcfg,
-                        spec_k=args.spec_k)
+        draft_seed = 1 if args.draft_seed is None else args.draft_seed
+        dparams = M.init_params(jax.random.PRNGKey(draft_seed), dcfg)
+        ecfg = replace(ecfg, draft_params=dparams)
         print(f"[serve] speculative: draft {args.draft} "
-              f"({sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(dparams)) / 1e6:.2f}M params), k={args.spec_k}")
+              f"({sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(dparams)) / 1e6:.2f}M params), k={ecfg.spec_k}")
     tel = Telemetry(trace=args.trace_out is not None)
     mon = KVCacheMonitor(registry=tel.registry)
-    eng = GenerationEngine(params_c, cfg, max_batch=args.max_batch,
-                           max_len=args.max_len, kv_monitor=mon, mesh=mesh,
-                           telemetry=tel, **cache_kw)
+    eng = GenerationEngine(params_c, cfg,
+                           config=replace(ecfg, telemetry=tel,
+                                          kv_monitor=mon))
     reqs = [Request(prompt=p, max_new_tokens=args.max_new) for p in prompts]
     for r in reqs:
         eng.submit(r)
@@ -314,8 +317,7 @@ def main(argv=None):
                   f"({s['n_resumed']} resumed)")
 
     if args.check_lossless and args.compress != "none":
-        eng2 = GenerationEngine(params_fp8, cfg, max_batch=args.max_batch,
-                                max_len=args.max_len, mesh=mesh, **cache_kw)
+        eng2 = GenerationEngine(params_fp8, cfg, config=ecfg)
         reqs2 = [Request(prompt=p, max_new_tokens=args.max_new)
                  for p in prompts]
         for r in reqs2:

@@ -1,4 +1,29 @@
-from .sampler import filter_logits, greedy, residual_probs, sample_logits  # noqa: F401
+"""Public serving API.
+
+``__all__`` below is the stable surface — documented in docs/API.md
+(tools/check_docs.py fails if the two drift apart).  Everything else in
+this package is internal and may change between PRs.
+"""
+from .config import EngineConfig, EngineConfigError  # noqa: F401
 from .engine import GenerationEngine, Request  # noqa: F401
+from .async_engine import (AsyncServingFrontend, FrontendClosed,  # noqa: F401
+                           FrontendOverloaded, TokenStream)
+from .router import Router  # noqa: F401
+from .telemetry import MetricsRegistry, Telemetry  # noqa: F401
+from .sampler import filter_logits, greedy, residual_probs, sample_logits  # noqa: F401
 from .scheduler import Preempted, Scheduler  # noqa: F401
 from . import spec  # noqa: F401
+
+__all__ = [
+    "EngineConfig",
+    "EngineConfigError",
+    "GenerationEngine",
+    "Request",
+    "AsyncServingFrontend",
+    "TokenStream",
+    "FrontendOverloaded",
+    "FrontendClosed",
+    "Router",
+    "Telemetry",
+    "MetricsRegistry",
+]

@@ -1,0 +1,242 @@
+"""Typed engine configuration: one validated object instead of 19 kwargs.
+
+``EngineConfig`` consolidates every ``GenerationEngine`` constructor
+option into a frozen dataclass with grouped fields (batch window / paged
+cache / swap + preemption / chunked prefill / prefix sharing /
+speculative decoding / telemetry), and — more importantly — centralises
+the **feature-gating matrix** that used to live as scattered
+warn-and-fall-back checks inside ``GenerationEngine.__init__``:
+
+========================  =====================================================
+feature                   requires
+========================  =====================================================
+paged cache               a pageable decoder stack (any 'attn'/'nope' layer,
+                          no encoder-decoder) and ``max_batch`` divisible by
+                          the mesh batch-axes size
+chunked prefill           the paged cache, an all-'attn'/'nope' layer stack,
+                          no model mesh axis
+prefix sharing            chunked prefill and a single batch shard
+speculative decoding      the paged cache, an all-'attn'/'nope' target stack,
+                          no model mesh axis, whole-prompt prefill, a draft
+                          sharing the target vocabulary
+========================  =====================================================
+
+``validate(cfg)`` resolves a config against an architecture + mesh and
+returns the resolved copy.  Arch-driven resolution (an encoder-decoder
+or pure-recurrent stack simply has nothing to page) is silent — it is
+not a user error.  A *user-requested feature* that cannot be served is
+a **fallback**: in the default lenient mode it warns (the exact
+warnings the engine used to emit) and disables the feature; with
+``strict=True`` — the mode ``launch/serve.py`` uses at argument-parse
+time — every fallback is an ``EngineConfigError`` instead, raised
+before any parameters are initialised.
+
+Runtime objects (``mesh``, ``draft_params``, ``telemetry``,
+``kv_monitor``) are carried but excluded from equality/``repr`` so
+resolved configs compare by their declarative fields.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, field, replace
+
+from repro.configs.base import ArchConfig
+from repro.kvcache.paged import PAGED_KINDS
+from repro.runtime import sharding as SH
+
+CACHE_MODES = ("paged", "monolithic")
+
+
+class EngineConfigError(ValueError):
+    """An EngineConfig field (or flag combination) that cannot be
+    served: invalid values, and — under ``validate(strict=True)`` —
+    user-requested features the architecture/mesh cannot support."""
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Declarative ``GenerationEngine`` configuration (see module
+    docstring for the gating matrix and docs/API.md for the public
+    surface).  Field groups mirror the subsystems:
+
+    * batch window: ``max_batch``, ``max_len``, ``rng_seed``, ``mesh``
+    * paged cache: ``cache_mode``, ``page_size``, ``n_pages``,
+      ``compress_cold``, ``n_cold_slots``
+    * swap + preemption: ``swap_bytes`` (positive cap, ``-1`` unbounded,
+      ``None``/``0`` off), ``preemption``
+    * chunked prefill: ``prefill_chunk``, ``prefill_budget``
+    * prefix sharing: ``prefix_sharing``
+    * speculative decoding: ``draft_params``, ``draft_cfg``, ``spec_k``
+    * observability: ``telemetry``, ``kv_monitor``
+    """
+
+    # -- batch window / keys --
+    max_batch: int = 8
+    max_len: int = 512
+    rng_seed: int = 0
+    mesh: object = field(default=None, compare=False, repr=False)
+    # -- paged cache --
+    cache_mode: str = "paged"
+    page_size: int = 16
+    n_pages: int | None = None
+    compress_cold: bool = False
+    n_cold_slots: int | None = None
+    # -- swap + preemption --
+    swap_bytes: int | None = None
+    preemption: bool = True
+    # -- chunked prefill --
+    prefill_chunk: int = 0
+    prefill_budget: int | None = None
+    # -- prefix sharing --
+    prefix_sharing: bool = False
+    # -- speculative decoding --
+    draft_params: object = field(default=None, compare=False, repr=False)
+    draft_cfg: ArchConfig | None = None
+    spec_k: int = 4
+    # -- observability --
+    telemetry: object = field(default=None, compare=False, repr=False)
+    kv_monitor: object = field(default=None, compare=False, repr=False)
+
+    def __post_init__(self):
+        bad = []
+        if self.cache_mode not in CACHE_MODES:
+            bad.append(f"cache_mode={self.cache_mode!r} "
+                       f"(must be one of {CACHE_MODES})")
+        if self.max_batch < 1:
+            bad.append(f"max_batch={self.max_batch} (must be >= 1)")
+        if self.max_len < 1:
+            bad.append(f"max_len={self.max_len} (must be >= 1)")
+        if self.page_size < 1:
+            bad.append(f"page_size={self.page_size} (must be >= 1)")
+        if self.spec_k < 1:
+            bad.append(f"spec_k={self.spec_k} (must be >= 1)")
+        if bad:
+            raise EngineConfigError("; ".join(bad))
+
+    # -- mesh-derived helpers ---------------------------------------------
+
+    def n_shards(self) -> int:
+        """Size of the mesh batch axes (1 without a mesh) — the divisor
+        ``max_batch`` must honour for per-shard slot ranges."""
+        if self.mesh is None:
+            return 1
+        return SH._axis_size(self.mesh, SH.batch_axes(self.mesh))
+
+    def n_model_shards(self) -> int:
+        if self.mesh is not None and "model" in self.mesh.axis_names:
+            return self.mesh.shape["model"]
+        return 1
+
+    # -- the gating matrix -------------------------------------------------
+
+    def validate(self, cfg: ArchConfig, *, strict: bool = False
+                 ) -> "EngineConfig":
+        """Resolve this config against architecture ``cfg`` and the
+        attached mesh; return the resolved copy the engine serves.
+
+        Arch-driven resolution (nothing to page) is silent.  Every
+        *user-requested* feature that cannot be served either warns and
+        falls back (default) or — ``strict=True`` — raises one
+        ``EngineConfigError`` listing every incompatibility at once."""
+        problems: list[str] = []
+        cache_mode = self.cache_mode
+        n_shards, n_model = self.n_shards(), self.n_model_shards()
+        # arch-driven: encoder-decoders and pure recurrent stacks have
+        # nothing to page — a silent resolve, never an error
+        if cache_mode == "paged" and (
+                cfg.encoder_decoder
+                or not any(cfg.layer_kind(i) in ("attn", "nope")
+                           for i in range(cfg.n_layers))):
+            cache_mode = "monolithic"
+        if cache_mode == "paged" and self.max_batch % n_shards:
+            problems.append(
+                f"max_batch={self.max_batch} not divisible by the mesh "
+                f"batch-axes size {n_shards}; falling back to the "
+                f"monolithic cache")
+            cache_mode = "monolithic"
+        all_paged = all(cfg.layer_kind(i) in PAGED_KINDS
+                        for i in range(cfg.n_layers))
+        chunk = min(max(self.prefill_chunk, 0), self.max_len)
+        if chunk and (cache_mode != "paged" or not all_paged
+                      or cfg.encoder_decoder or n_model > 1):
+            problems.append(
+                f"prefill_chunk={self.prefill_chunk} needs the paged "
+                f"cache, an all-'attn'/'nope' layer stack and no model "
+                f"mesh axis; falling back to whole-prompt prefill")
+            chunk = 0
+        budget = max(self.prefill_budget or chunk, 1) if chunk else 0
+        prefix_sharing = bool(self.prefix_sharing)
+        if prefix_sharing and (not chunk or n_shards != 1):
+            problems.append(
+                "prefix_sharing needs chunked prefill (prefill_chunk > 0, "
+                "with its paged-cache requirements) and a single batch "
+                "shard; serving without sharing")
+            prefix_sharing = False
+        draft_params, draft_cfg = self.draft_params, self.draft_cfg
+        if draft_cfg is not None and (
+                cache_mode != "paged" or not all_paged
+                or cfg.encoder_decoder or draft_cfg.encoder_decoder
+                or n_model > 1 or chunk
+                or draft_cfg.vocab_size != cfg.vocab_size):
+            problems.append(
+                "speculative decoding needs the paged cache, an "
+                "all-'attn'/'nope' target stack, no model mesh axis, "
+                "whole-prompt prefill and a same-vocabulary draft; "
+                "serving target-only")
+            draft_params = draft_cfg = None
+        if problems and strict:
+            raise EngineConfigError(
+                "incompatible engine configuration:\n  - "
+                + "\n  - ".join(problems))
+        for msg in problems:
+            warnings.warn(msg, stacklevel=2)
+        return replace(self, cache_mode=cache_mode, prefill_chunk=chunk,
+                       prefill_budget=budget, prefix_sharing=prefix_sharing,
+                       draft_params=draft_params, draft_cfg=draft_cfg)
+
+    # -- CLI mapping -------------------------------------------------------
+
+    @classmethod
+    def from_args(cls, args, cfg: ArchConfig | None = None,
+                  **overrides) -> "EngineConfig":
+        """Build a config from ``launch/serve.py``'s argparse namespace —
+        the 1:1 flag→field mapping, in one place.
+
+        Ignored-flag combinations (``--spec-k``/``--draft-seed`` without
+        ``--draft``) raise ``EngineConfigError`` immediately; when
+        ``cfg`` is given the result is also resolved with
+        ``validate(cfg, strict=True)``, so incompatible feature requests
+        (e.g. ``--prefix-sharing`` with ``--draft``) fail at
+        argument-parse time instead of deep inside engine construction.
+        ``overrides`` supply fields with no CLI flag (``mesh``,
+        ``draft_cfg``, ``telemetry``, ...)."""
+        ignored = []
+        if not getattr(args, "draft", None):
+            if getattr(args, "spec_k", None) is not None:
+                ignored.append("--spec-k")
+            if getattr(args, "draft_seed", None) is not None:
+                ignored.append("--draft-seed")
+        if ignored:
+            raise EngineConfigError(
+                f"{'/'.join(ignored)} ha{'s' if len(ignored) == 1 else 've'}"
+                f" no effect without --draft")
+        spec_k = getattr(args, "spec_k", None)
+        ecfg = cls(
+            max_batch=args.max_batch,
+            max_len=args.max_len,
+            rng_seed=args.seed,
+            cache_mode=("monolithic" if args.cache == "monolithic"
+                        else "paged"),
+            page_size=args.page_size,
+            n_pages=args.n_pages,
+            compress_cold=args.cache == "paged-compressed",
+            swap_bytes=args.swap_bytes,
+            preemption=args.preemption,
+            prefill_chunk=args.prefill_chunk,
+            prefill_budget=args.prefill_budget or None,
+            prefix_sharing=args.prefix_sharing,
+            spec_k=spec_k if spec_k is not None else 4,
+            **overrides)
+        if cfg is not None:
+            ecfg = ecfg.validate(cfg, strict=True)
+        return ecfg

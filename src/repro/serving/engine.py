@@ -84,11 +84,12 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.kvcache import OutOfPages, PagedKVCache, SwapStore
-from repro.kvcache.paged import PAGED_KINDS, restore_cold, strip_cold
+from repro.kvcache.paged import restore_cold, strip_cold
 from repro.kvcache.swap import SwapExhausted
 from repro.models import model as M
 from repro.runtime import sharding as SH
 from . import spec as SPEC
+from .config import EngineConfig
 from .sampler import greedy, request_key, sample_logits
 from .scheduler import Preempted, Scheduler
 
@@ -192,109 +193,58 @@ def splice_fragment(cache, frag, slot: int):
 
 
 class GenerationEngine:
-    def __init__(self, params, cfg: ArchConfig, *, max_batch: int = 8,
-                 max_len: int = 512, mesh=None, rng_seed: int = 0,
-                 cache_mode: str = "paged", page_size: int = 16,
-                 n_pages: int | None = None, compress_cold: bool = False,
-                 n_cold_slots: int | None = None, kv_monitor=None,
-                 swap_bytes: int | None = None, preemption: bool = True,
-                 prefill_chunk: int = 0, prefill_budget: int | None = None,
-                 prefix_sharing: bool = False,
-                 draft_params=None, draft_cfg: ArchConfig | None = None,
-                 spec_k: int = 4, telemetry=None):
-        """``mesh``: optional ``jax.sharding.Mesh``; the paged cache shards
-        over its batch axes (see module docstring) and decode/prefill steps
-        are jitted against it.  ``cache_mode``/``page_size``/``n_pages``/
-        ``compress_cold``/``n_cold_slots`` configure the paged cache
-        (``kvcache.PagedKVCache``); ``kv_monitor`` (``runtime.monitor.
-        KVCacheMonitor``) records per-step memory stats.
+    def __init__(self, params, cfg: ArchConfig,
+                 config: EngineConfig | None = None, **legacy):
+        """``config`` (``serving.config.EngineConfig``) is the primary
+        constructor input: every engine option lives there as a grouped,
+        validated field, and the feature-gating matrix (chunked / mesh /
+        spec / prefix interactions) is applied by
+        ``EngineConfig.validate`` — see that module's docstring for the
+        matrix and the per-field semantics.  Passing the old flat
+        keyword arguments still works via a deprecation shim
+        (``GenerationEngine(params, cfg, max_batch=8, ...)`` becomes
+        ``EngineConfig(max_batch=8, ...)`` with a ``DeprecationWarning``).
 
-        ``swap_bytes`` enables the host swap tier: a positive value caps
-        resident swapped bytes, ``-1`` is unbounded, ``None``/``0``
-        disables swapping (and with it preemption).  ``preemption``
-        gates whole-request preemption on top of an enabled swap tier —
-        with it off, the swap tier is never used (there is no other
-        eviction source) and admission behaves like the seed engine.
-
-        ``prefill_chunk`` > 0 enables chunked, decode-interleaved
-        prefill (see module docstring); ``prefill_budget`` caps the
-        prompt tokens spent on prefill per engine step (default: one
-        chunk).  Chunked prefill needs the paged cache, an architecture
-        whose every layer pages, and a mesh without a model axis —
-        otherwise the engine warns and prefills whole prompts.
-
-        ``prefix_sharing`` enables **cross-request prefix sharing** on
-        top of chunked prefill: page-aligned prompt-prefix blocks are
-        content-addressed in a ``PrefixIndex``, admission increfs the
-        matching physical pages instead of recomputing them (one
-        physical copy serves every holder, copy-on-write protected) and
-        prefill skips the matched positions — TTFT of a hit is the
-        unmatched-suffix cost.  The token stream is byte-identical to
-        serving without sharing: matched pages hold exactly the bits a
-        fresh chunked prefill of the same tokens would write (chunk
-        partitioning never changes per-position K/V bits), and full
-        prompt blocks are never written again while shared.  Requires
-        chunked prefill and a single batch shard; otherwise the engine
-        warns and serves unshared.
-
-        ``draft_params``/``draft_cfg`` attach a **draft model** for
-        speculative decoding with exact rejection sampling
-        (``serving.spec``): each engine step the draft proposes
-        ``spec_k`` tokens per active slot (batched draft decode steps on
-        a paired monolithic draft cache, slot ``s`` of the draft paired
-        with target slot ``s``), the target verifies all ``spec_k + 1``
-        positions in one chunk-append forward (``models.model.
-        verify_chunk``), and rejected suffixes roll back timeline +
-        pages bit-exactly (``PagedKVCache.rollback``).  The output
-        distribution is provably identical to target-only decoding —
-        exactly token-identical under greedy — and accepted tokens are
-        schedule-, preemption- and k-invariant (keys fold from
-        ``(rng_seed, request.id, position)`` only).  Requires the paged
-        cache, an all-'attn'/'nope' target stack, no model mesh axis,
-        whole-prompt prefill (``prefill_chunk=0``) and a draft sharing
-        the target's vocabulary; otherwise the engine warns and serves
-        target-only.
-
-        ``telemetry`` (``serving.telemetry.Telemetry``) turns on the
-        observability subsystem: per-request lifecycle spans and
-        engine-phase spans on its tracer, latency/TTFT/step-time
-        histograms and queue/pages gauges in its registry (metric names:
-        docs/OBSERVABILITY.md).  Pure host-side observation — the token
-        stream is bit-identical with telemetry on or off."""
+        Incompatible feature requests warn and fall back here exactly as
+        before (the warnings now originate from ``validate``); callers
+        that want errors instead validate strictly up front, like
+        ``launch/serve.py`` does at argument-parse time."""
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either config=EngineConfig(...) or legacy "
+                    "keyword arguments, not both")
+            warnings.warn(
+                "GenerationEngine(params, cfg, **kwargs) is deprecated; "
+                "pass config=EngineConfig(...) instead",
+                DeprecationWarning, stacklevel=2)
+            config = EngineConfig(**legacy)
+        elif config is None:
+            config = EngineConfig()
+        if (config.draft_params is None) != (config.draft_cfg is None):
+            raise ValueError(
+                "draft_params and draft_cfg must be provided together")
+        config = config.validate(cfg)
+        self.config = config
         self.params, self.cfg = params, cfg
-        self.max_batch, self.max_len = max_batch, max_len
-        self.mesh = mesh
+        max_batch = self.max_batch = config.max_batch
+        max_len = self.max_len = config.max_len
+        mesh = self.mesh = config.mesh
         self.slots: list = [None] * max_batch   # Request or None
         self._inflight: list = []               # submitted, not yet returned
-        # fall back to the monolithic cache for encoder-decoders and pure
-        # recurrent stacks (nothing to page); meshes are served paged, with
-        # pool/table sharded over the batch axes — unless the batch-axes
-        # size does not divide max_batch (no per-shard slot ranges then).
-        n_shards = 1
-        if mesh is not None:
-            n_shards = SH._axis_size(mesh, SH.batch_axes(mesh))
-        if cache_mode == "paged" and (
-                cfg.encoder_decoder
-                or not any(cfg.layer_kind(i) in ("attn", "nope")
-                           for i in range(cfg.n_layers))):
-            cache_mode = "monolithic"
-        if cache_mode == "paged" and max_batch % n_shards:
-            warnings.warn(
-                f"max_batch={max_batch} not divisible by the mesh batch-"
-                f"axes size {n_shards}; falling back to the monolithic "
-                f"cache", stacklevel=2)
-            cache_mode = "monolithic"
-        self.cache_mode = cache_mode
-        self.kv_monitor = kv_monitor
+        n_shards = config.n_shards()
+        self.cache_mode = cache_mode = config.cache_mode
+        self.kv_monitor = config.kv_monitor
         if cache_mode == "paged":
             self.paged = PagedKVCache(
                 cfg, max_batch, max_len, dtype=jnp.dtype(cfg.dtype),
-                page_size=page_size, n_pages=n_pages,
-                compress_cold=compress_cold, n_cold_slots=n_cold_slots,
-                n_shards=n_shards)
-            if swap_bytes:
+                page_size=config.page_size, n_pages=config.n_pages,
+                compress_cold=config.compress_cold,
+                n_cold_slots=config.n_cold_slots, n_shards=n_shards)
+            if config.swap_bytes:
                 self.paged.attach_swap(SwapStore(
-                    capacity_bytes=None if swap_bytes < 0 else swap_bytes,
+                    capacity_bytes=(None if config.swap_bytes < 0
+                                    else config.swap_bytes),
                     n_shards=n_shards))
             self.cache = self.paged.init_cache()
             if mesh is not None:
@@ -307,84 +257,40 @@ class GenerationEngine:
             self.cache = M.init_cache(cfg, max_batch, max_len,
                                       dtype=jnp.dtype(cfg.dtype),
                                       per_slot=True)
-        # chunked prefill: gate to configs the chunk path supports, then
-        # clamp the chunk/budget to the window
-        chunk = min(max(prefill_chunk, 0), max_len)
-        if chunk:
-            n_model = 1
-            if mesh is not None and "model" in mesh.axis_names:
-                n_model = mesh.shape["model"]
-            all_paged = all(cfg.layer_kind(i) in PAGED_KINDS
-                            for i in range(cfg.n_layers))
-            if (self.cache_mode != "paged" or not all_paged
-                    or cfg.encoder_decoder or n_model > 1):
-                warnings.warn(
-                    f"prefill_chunk={prefill_chunk} needs the paged cache, "
-                    f"an all-'attn'/'nope' layer stack and no model mesh "
-                    f"axis; falling back to whole-prompt prefill",
-                    stacklevel=2)
-                chunk = 0
-        self.prefill_chunk = chunk
-        self.prefill_budget = max(prefill_budget or chunk, 1) if chunk else 0
-        # cross-request prefix sharing rides the chunked-prefill path
-        # (admission sets cur_len to the matched length and chunks resume
-        # at the boundary — zero new compilations) and needs shard-local
-        # pages to be reachable from every slot (n_shards == 1)
-        self.prefix_sharing = bool(prefix_sharing)
-        if self.prefix_sharing and (not chunk or n_shards != 1):
-            warnings.warn(
-                "prefix_sharing needs chunked prefill (prefill_chunk > 0, "
-                "with its paged-cache requirements) and a single batch "
-                "shard; serving without sharing", stacklevel=2)
-            self.prefix_sharing = False
+        chunk = self.prefill_chunk = config.prefill_chunk
+        self.prefill_budget = config.prefill_budget
+        self.prefix_sharing = config.prefix_sharing
         if self.prefix_sharing:
             self.paged.enable_prefix_sharing()
         self._prefill_pos: dict[int, int] = {}  # slot -> prompt tokens done
         self._prefill_order: list[int] = []     # admission order (FIFO)
         self._stalled_ids: set = set()          # self-preempted this step
         self.n_chunks = self.n_chunk_tokens = self.n_interleaved_steps = 0
-        # speculative decoding: gate to configs the verify path supports
-        # (same family of constraints as chunked prefill — the verify
-        # forward is a chunk append), plus a vocabulary-compatible draft
-        self.spec_on = False
-        self.spec_k = max(int(spec_k), 1)
-        if draft_params is not None and draft_cfg is not None:
-            n_model = 1
-            if mesh is not None and "model" in mesh.axis_names:
-                n_model = mesh.shape["model"]
-            all_paged = all(cfg.layer_kind(i) in PAGED_KINDS
-                            for i in range(cfg.n_layers))
-            if (self.cache_mode != "paged" or not all_paged
-                    or cfg.encoder_decoder or draft_cfg.encoder_decoder
-                    or n_model > 1 or self.prefill_chunk
-                    or draft_cfg.vocab_size != cfg.vocab_size):
-                warnings.warn(
-                    "speculative decoding needs the paged cache, an "
-                    "all-'attn'/'nope' target stack, no model mesh axis, "
-                    "whole-prompt prefill and a same-vocabulary draft; "
-                    "serving target-only", stacklevel=2)
-            else:
-                self.spec_on = True
-                self.draft_params, self.draft_cfg = draft_params, draft_cfg
-                self._draft_decode, self._draft_prefill = _jitted_steps(
-                    draft_cfg, mesh, max_len)
-                self._verify = _jitted_verify(cfg, mesh, max_len,
-                                              self.spec_k + 1)
-                # the paired draft cache: always monolithic (a small
-                # draft needs no paging, and rejection rollback is a
-                # per-slot snapshot re-splice — works for recurrent
-                # drafts too, where no positional rollback exists)
-                self.draft_cache = M.init_cache(
-                    draft_cfg, max_batch, max_len,
-                    dtype=jnp.dtype(draft_cfg.dtype), per_slot=True)
+        self.spec_on = config.draft_cfg is not None
+        self.spec_k = config.spec_k
+        if self.spec_on:
+            self.draft_params = config.draft_params
+            self.draft_cfg = draft_cfg = config.draft_cfg
+            self._draft_decode, self._draft_prefill = _jitted_steps(
+                draft_cfg, mesh, max_len)
+            self._verify = _jitted_verify(cfg, mesh, max_len,
+                                          self.spec_k + 1)
+            # the paired draft cache: always monolithic (a small draft
+            # needs no paging, and rejection rollback is a per-slot
+            # snapshot re-splice — works for recurrent drafts too,
+            # where no positional rollback exists)
+            self.draft_cache = M.init_cache(
+                draft_cfg, max_batch, max_len,
+                dtype=jnp.dtype(draft_cfg.dtype), per_slot=True)
         self.n_spec_rounds = self.n_spec_drafted = self.n_spec_accepted = 0
-        self.scheduler = Scheduler(paged=self.paged, preemption=preemption,
+        self.scheduler = Scheduler(paged=self.paged,
+                                   preemption=config.preemption,
                                    chunk_tokens=chunk)
         self._host_len = [0] * max_batch        # next write position per slot
         # sampling keys fold (rng_seed, request.id, position) — the token
         # stream of a sampled request is a pure function of its own state,
         # independent of batching, scheduling and preemption
-        self.rng0 = jax.random.PRNGKey(rng_seed)
+        self.rng0 = jax.random.PRNGKey(config.rng_seed)
         self._decode, self._prefill = _jitted_steps(cfg, mesh, max_len)
         self._chunk = (_jitted_chunk(cfg, mesh, max_len, chunk)
                        if chunk else None)
@@ -392,7 +298,7 @@ class GenerationEngine:
         self.steps = 0
         # telemetry is host-side observation only (None = off): per-request
         # lifecycle spans, engine-phase spans and the metrics registry
-        self.tel = telemetry
+        telemetry = self.tel = config.telemetry
         self._submit_t: dict = {}       # request id -> submit wall time
         self._straggler = None
         if telemetry is not None:
@@ -460,6 +366,22 @@ class GenerationEngine:
             tel.tracer.counter("serving_active_slots", act)
 
     # -- scheduling --------------------------------------------------------
+
+    def load(self) -> int:
+        """Requests this engine currently owns: occupied slots plus the
+        scheduler backlog (queued + preempted).  The router's
+        least-loaded placement signal."""
+        return (sum(1 for s in self.slots if s is not None)
+                + self.scheduler.waiting)
+
+    def prefix_match_tokens(self, prompt) -> int:
+        """Longest index-resident prefix of ``prompt`` this engine could
+        adopt by reference (0 without prefix sharing) — the router's
+        prefix-affinity placement signal.  Purely advisory: reading the
+        index allocates nothing and changes no state."""
+        if self.paged is None or self.paged.prefix is None:
+            return 0
+        return self.paged.match_prefix(list(prompt))
 
     def submit(self, req: Request):
         self.scheduler.submit(req)

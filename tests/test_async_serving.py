@@ -1,0 +1,286 @@
+"""Async serving front end + router (ISSUE 9).
+
+Differential layer: token streams flushed by ``AsyncServingFrontend``
+must be **bit-identical** to a synchronous ``GenerationEngine.run()`` of
+the same requests — including under whole-request preemption (the
+oversubscribed swap tier), under prefix sharing, and across 2 replicas
+behind the least-loaded router.  Sampling keys fold
+``(rng_seed, request.id, position)`` only, so admission timing, replica
+choice and placement cannot change any token.
+
+Tests run the driver with ``asyncio.run`` (no pytest-asyncio in the
+image); when a test needs concurrent consumption it spawns
+``frontend.run()`` as a background task inside one event loop.
+"""
+import asyncio
+
+import pytest
+import jax
+
+from repro.configs import get, smoke_variant
+from repro.models import model as M
+from repro.runtime.monitor import KVCacheMonitor
+from repro.serving import (AsyncServingFrontend, EngineConfig,
+                           FrontendClosed, FrontendOverloaded,
+                           GenerationEngine, Request, Router, Telemetry)
+
+from benchmarks.load_replay import build_trace, replay
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = smoke_variant(get("qwen3-8b"))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _requests(id_base=8_000, n=5):
+    return [Request(prompt=[i + 1] * (3 + i % 4), max_new_tokens=4 + i % 3,
+                    priority=i % 2, id=id_base + i) for i in range(n)]
+
+
+def _sync_reference(params, cfg, ecfg, reqs):
+    """Serve clones of ``reqs`` (same ids => same sampling keys) on one
+    synchronous engine; returns {id: out_tokens}."""
+    eng = GenerationEngine(params, cfg, config=ecfg)
+    clones = [Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens,
+                      priority=r.priority, id=r.id) for r in reqs]
+    for r in clones:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done for r in clones)
+    return {r.id: r.out_tokens for r in clones}
+
+
+def _serve_async(params, cfg, ecfg, reqs, *, n_replicas=1, **fe_kw):
+    """Submit all of ``reqs`` up front, drain, return {id: stream}."""
+    replicas = [GenerationEngine(params, cfg, config=ecfg)
+                for _ in range(n_replicas)]
+    fe = AsyncServingFrontend(replicas, **fe_kw)
+
+    async def go():
+        streams = {r.id: fe.submit_nowait(r) for r in reqs}
+        await fe.drain()
+        return streams
+
+    return asyncio.run(go()), fe
+
+
+def test_async_stream_bit_identical_to_sync(world):
+    params, cfg = world
+    ecfg = EngineConfig(max_batch=2, max_len=48)
+    reqs = _requests()
+    ref = _sync_reference(params, cfg, ecfg, reqs)
+    streams, fe = _serve_async(params, cfg, ecfg, reqs)
+    assert fe.n_completed == len(reqs) and fe.n_shed == 0
+    for r in reqs:
+        assert r.done and streams[r.id].finished
+        assert streams[r.id].tokens == r.out_tokens == ref[r.id], r.id
+
+
+def test_async_bit_identical_under_preemption(world):
+    """The differential holds through eviction + whole-request
+    preemption: the async frontend over the oversubscribed swap-tier
+    config streams the same tokens as the monolithic sync engine."""
+    from test_serving import _OVERSUB, _oversub_requests
+    params, cfg = world
+    reqs = _oversub_requests(id_base=8_100)
+    ref = _sync_reference(
+        params, cfg, EngineConfig(max_batch=2, max_len=48,
+                                  cache_mode="monolithic"), reqs)
+    mon = KVCacheMonitor()
+    ecfg = EngineConfig(max_batch=2, max_len=48, kv_monitor=mon, **_OVERSUB)
+    streams, _ = _serve_async(params, cfg, ecfg, reqs)
+    assert mon.summary()["n_preempted"] > 0      # preemption really fired
+    for r in reqs:
+        assert streams[r.id].tokens == ref[r.id], r.id
+
+
+def test_async_bit_identical_with_prefix_sharing(world):
+    params, cfg = world
+    ecfg = EngineConfig(max_batch=3, max_len=64, prefill_chunk=8,
+                        prefix_sharing=True)
+    system = [7] * 16
+    reqs = [Request(prompt=system + [i + 1] * 3, max_new_tokens=4,
+                    id=8_200 + i) for i in range(4)]
+    ref = _sync_reference(params, cfg, ecfg, reqs)
+    tel = Telemetry(trace=False)
+    from dataclasses import replace
+    streams, _ = _serve_async(params, cfg, replace(ecfg, telemetry=tel),
+                              reqs, telemetry=tel)
+    assert tel.registry.value("prefix_hit_total") > 0
+    for r in reqs:
+        assert streams[r.id].tokens == ref[r.id], r.id
+
+
+def test_two_replicas_bit_identical_and_balanced(world):
+    """Replica placement cannot change tokens (shared rng_seed), and the
+    least-loaded router actually uses both replicas."""
+    params, cfg = world
+    ecfg = EngineConfig(max_batch=2, max_len=48)
+    reqs = _requests(id_base=8_300, n=6)
+    ref = _sync_reference(params, cfg, ecfg, reqs)
+    streams, fe = _serve_async(params, cfg, ecfg, reqs, n_replicas=2)
+    for r in reqs:
+        assert streams[r.id].tokens == ref[r.id], r.id
+    used = {idx for _, idx, _ in fe.router.placements}
+    assert used == {0, 1}, fe.router.placements
+
+
+def test_streaming_consumer_sees_tokens_incrementally(world):
+    """``async for`` over a stream while ``run()`` drives in the
+    background yields every token in order and terminates."""
+    params, cfg = world
+    ecfg = EngineConfig(max_batch=2, max_len=48)
+    req = Request(prompt=[1, 2, 3], max_new_tokens=5, id=8_400)
+    ref = _sync_reference(params, cfg, ecfg, [req])
+
+    async def go():
+        fe = AsyncServingFrontend(
+            GenerationEngine(params, cfg, config=ecfg))
+        driver = asyncio.create_task(fe.run())
+        stream = await fe.submit(req)
+        got = [tok async for tok in stream]
+        await fe.close()
+        await driver
+        return got
+
+    assert asyncio.run(go()) == ref[req.id]
+
+
+def test_backpressure_reject(world):
+    params, cfg = world
+    ecfg = EngineConfig(max_batch=2, max_len=48)
+    fe = AsyncServingFrontend(GenerationEngine(params, cfg, config=ecfg),
+                              max_pending=2, shed_policy="reject")
+    a, b = _requests(id_base=8_500, n=2)
+    fe.submit_nowait(a), fe.submit_nowait(b)
+    with pytest.raises(FrontendOverloaded):
+        fe.submit_nowait(Request(prompt=[9], max_new_tokens=2, id=8_510))
+    assert fe.n_shed == 1
+    asyncio.run(fe.drain())
+    assert a.done and b.done
+
+
+def test_backpressure_drop_lowest(world):
+    """A full queue under ``drop-lowest``: a higher-priority newcomer
+    evicts the lowest-priority queued request (latest arrival within the
+    class); a lowest-or-equal newcomer is itself shed."""
+    params, cfg = world
+    ecfg = EngineConfig(max_batch=1, max_len=48)
+    fe = AsyncServingFrontend(GenerationEngine(params, cfg, config=ecfg),
+                              max_pending=2, shed_policy="drop-lowest")
+    lo1 = Request(prompt=[1], max_new_tokens=2, priority=0, id=8_600)
+    lo2 = Request(prompt=[2], max_new_tokens=2, priority=0, id=8_601)
+    s_lo1, s_lo2 = fe.submit_nowait(lo1), fe.submit_nowait(lo2)
+
+    # equal priority: the newcomer is the victim, stream pre-terminated
+    eq = Request(prompt=[3], max_new_tokens=2, priority=0, id=8_602)
+    s_eq = fe.submit_nowait(eq)
+    assert s_eq.shed and s_eq.finished and fe.n_shed == 1
+
+    # higher priority: sheds the latest-queued lowest-priority request
+    hi = Request(prompt=[4], max_new_tokens=2, priority=2, id=8_603)
+    s_hi = fe.submit_nowait(hi)
+    assert s_lo2.shed and not s_hi.shed and fe.n_shed == 2
+
+    asyncio.run(fe.drain())
+    assert lo1.done and hi.done and not lo2.done
+    assert s_lo1.tokens == lo1.out_tokens
+    assert s_hi.tokens == hi.out_tokens
+
+
+def test_close_semantics(world):
+    """``close(drain=False)`` sheds the queue but finishes in-flight
+    work; submissions after close raise ``FrontendClosed``."""
+    params, cfg = world
+    ecfg = EngineConfig(max_batch=1, max_len=48)
+
+    async def go():
+        fe = AsyncServingFrontend(
+            GenerationEngine(params, cfg, config=ecfg), max_pending=8)
+        reqs = _requests(id_base=8_700, n=4)
+        streams = {r.id: fe.submit_nowait(r) for r in reqs}
+        await fe.step()                      # admits up to the backlog cap
+        await fe.close(drain=False)
+        with pytest.raises(FrontendClosed):
+            fe.submit_nowait(Request(prompt=[1], max_new_tokens=1, id=8_710))
+        return fe, reqs, streams
+
+    fe, reqs, streams = asyncio.run(go())
+    assert fe.n_shed > 0 and fe.n_completed > 0
+    assert fe.n_shed + fe.n_completed == len(reqs)
+    for r in reqs:
+        s = streams[r.id]
+        assert s.finished and (s.shed or (r.done and s.tokens == r.out_tokens))
+
+
+def test_router_prefix_affinity(world):
+    """A request sharing a served prefix routes to the replica holding
+    it even when that replica is busier."""
+    params, cfg = world
+    ecfg = EngineConfig(max_batch=3, max_len=64, prefill_chunk=8,
+                        prefix_sharing=True)
+    replicas = [GenerationEngine(params, cfg, config=ecfg)
+                for _ in range(2)]
+    router = Router(replicas)
+    system = [5] * 16
+    warm = Request(prompt=system + [1, 2], max_new_tokens=2, id=8_800)
+    router.submit_to(1, warm, reason="warm")     # replica 1 owns the prefix
+    replicas[1].run()
+    assert replicas[1].prefix_match_tokens(system + [9]) > 0
+    # replica 1 is also the busier one -> affinity must win over load
+    router.submit_to(1, Request(prompt=[3], max_new_tokens=8, id=8_801),
+                     reason="fill")
+    idx, reason = router.place(
+        Request(prompt=system + [4], max_new_tokens=2, id=8_802))
+    assert (idx, reason) == (1, "prefix-affinity")
+    # no shared prefix -> plain least-loaded (replica 0 is idle)
+    idx, reason = router.place(
+        Request(prompt=[6, 7], max_new_tokens=2, id=8_803))
+    assert (idx, reason) == (0, "least-loaded")
+
+
+def test_router_placement_deterministic_under_seeded_trace(world):
+    """The seeded bursty trace replayed twice through identical fleets
+    produces identical placements and identical shed sets — frontend
+    decisions are tick-state functions, never wall clock."""
+    params, cfg = world
+    ecfg = EngineConfig(max_batch=2, max_len=64, prefill_chunk=8,
+                        prefix_sharing=True)
+    trace = build_trace(seed=3, n_requests=12, vocab=cfg.vocab_size)
+
+    def once():
+        fe = AsyncServingFrontend(
+            [GenerationEngine(params, cfg, config=ecfg) for _ in range(2)],
+            max_pending=4, shed_policy="reject")
+        streams, reqs = asyncio.run(replay(fe, trace))
+        shed = [i for i, s in enumerate(streams) if s is None]
+        toks = [s.tokens for s in streams if s is not None]
+        return [(rid, idx, why) for rid, idx, why in fe.router.placements], \
+            shed, toks
+
+    p1, shed1, t1 = once()
+    p2, shed2, t2 = once()
+    assert p1 == p2 and shed1 == shed2 and t1 == t2
+    assert len(p1) + len(shed1) == len(trace)
+
+
+def test_frontend_metrics_published(world):
+    """frontend_*/router_* metrics land in the shared registry."""
+    params, cfg = world
+    tel = Telemetry(trace=False)
+    ecfg = EngineConfig(max_batch=2, max_len=48, telemetry=tel)
+    reqs = _requests(id_base=8_900, n=3)
+    streams, fe = _serve_async(params, cfg, ecfg, reqs, n_replicas=2,
+                               telemetry=tel)
+    reg = tel.registry
+    assert reg.value("frontend_requests_total") == 3
+    assert reg.value("frontend_completed_total") == 3
+    assert reg.value("frontend_stream_tokens_total") == \
+        sum(len(s.tokens) for s in streams.values())
+    assert reg.value("router_placements_total") == 3
+    assert reg.value("frontend_queue_depth") == 0
+    assert reg.get("frontend_stream_ttft_seconds").count == 3
+    assert reg.value("router_replica0_load") == 0
+    assert reg.value("router_replica1_load") == 0

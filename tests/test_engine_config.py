@@ -1,0 +1,208 @@
+"""EngineConfig: scalar validation, the centralised gating matrix,
+``from_args`` CLI mapping, and the legacy-kwargs deprecation shim
+(ISSUE 9).
+
+The gating matrix used to live as scattered warn-and-fall-back checks in
+``GenerationEngine.__init__``; these tests pin the resolved fields and
+warning texts for every row, in both lenient (warn + fall back) and
+strict (one ``EngineConfigError`` listing all problems) modes.
+"""
+from types import SimpleNamespace
+
+import pytest
+import jax
+
+from repro.configs import get, smoke_variant
+from repro.serving import (EngineConfig, EngineConfigError,
+                           GenerationEngine, Request)
+
+
+@pytest.fixture(scope="module")
+def arch():
+    return smoke_variant(get("qwen3-8b"))       # all-'attn' stack
+
+
+@pytest.fixture(scope="module")
+def world(arch):
+    from repro.models import model as M
+    return M.init_params(jax.random.PRNGKey(0), arch), arch
+
+
+# -- scalar field validation (construction time) ---------------------------
+
+@pytest.mark.parametrize("kw, frag", [
+    (dict(cache_mode="lru"), "cache_mode"),
+    (dict(max_batch=0), "max_batch"),
+    (dict(max_len=0), "max_len"),
+    (dict(page_size=0), "page_size"),
+    (dict(spec_k=0), "spec_k"),
+])
+def test_scalar_errors(kw, frag):
+    with pytest.raises(EngineConfigError, match=frag):
+        EngineConfig(**kw)
+
+
+def test_scalar_errors_are_collected():
+    with pytest.raises(EngineConfigError) as e:
+        EngineConfig(max_batch=0, spec_k=-1)
+    assert "max_batch" in str(e.value) and "spec_k" in str(e.value)
+
+
+# -- the gating matrix -----------------------------------------------------
+
+def test_arch_driven_resolution_is_silent():
+    """A pure-recurrent stack has nothing to page: cache_mode resolves
+    to monolithic with no warning — it is not a user error."""
+    import warnings
+    xl = smoke_variant(get("xlstm-350m"))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        out = EngineConfig(cache_mode="paged").validate(xl)
+    assert out.cache_mode == "monolithic"
+
+
+def test_chunked_prefill_needs_paged_cache(arch):
+    with pytest.warns(UserWarning, match="prefill_chunk"):
+        out = EngineConfig(cache_mode="monolithic",
+                           prefill_chunk=8).validate(arch)
+    assert out.prefill_chunk == 0 and out.prefill_budget == 0
+
+
+def test_prefill_chunk_clamped_and_budget_defaulted(arch):
+    out = EngineConfig(max_len=32, prefill_chunk=100).validate(arch)
+    assert out.prefill_chunk == 32          # clamped to max_len
+    assert out.prefill_budget == 32         # budget defaults to the chunk
+    out = EngineConfig(prefill_chunk=8, prefill_budget=24).validate(arch)
+    assert (out.prefill_chunk, out.prefill_budget) == (8, 24)
+
+
+def test_prefix_sharing_needs_chunked_prefill(arch):
+    with pytest.warns(UserWarning, match="prefix_sharing"):
+        out = EngineConfig(prefix_sharing=True).validate(arch)
+    assert out.prefix_sharing is False
+
+
+def test_speculative_incompatible_with_chunked_prefill(arch):
+    draft = smoke_variant(get("qwen3-8b"))
+    with pytest.warns(UserWarning, match="speculative"):
+        out = EngineConfig(prefill_chunk=8, draft_cfg=draft,
+                           draft_params=object()).validate(arch)
+    assert out.draft_cfg is None and out.draft_params is None
+    assert out.prefill_chunk == 8           # the chunk itself survives
+
+
+def test_speculative_needs_same_vocab(arch):
+    from dataclasses import replace
+    draft = replace(smoke_variant(get("qwen3-8b")),
+                    vocab_size=arch.vocab_size * 2)
+    with pytest.warns(UserWarning, match="speculative"):
+        out = EngineConfig(draft_cfg=draft,
+                           draft_params=object()).validate(arch)
+    assert out.draft_cfg is None
+
+
+def test_strict_mode_collects_every_problem(arch):
+    with pytest.raises(EngineConfigError) as e:
+        EngineConfig(cache_mode="monolithic", prefill_chunk=8,
+                     prefix_sharing=True,
+                     draft_cfg=smoke_variant(get("qwen3-8b")),
+                     draft_params=object()).validate(arch, strict=True)
+    msg = str(e.value)
+    assert msg.startswith("incompatible engine configuration:")
+    for frag in ("prefill_chunk", "prefix_sharing", "speculative"):
+        assert frag in msg, frag
+
+
+def test_valid_config_resolves_unchanged(arch):
+    from dataclasses import replace
+    ecfg = EngineConfig(max_batch=4, max_len=64, prefill_chunk=8,
+                        prefix_sharing=True)
+    out = ecfg.validate(arch, strict=True)    # no warning, no error
+    # identical up to budget resolution (None -> the chunk); frozen
+    # dataclass equality compares the declarative fields only
+    assert out == replace(ecfg, prefill_budget=8)
+    assert out.validate(arch, strict=True) == out     # idempotent
+
+
+# -- from_args CLI mapping -------------------------------------------------
+
+def _args(**over):
+    base = dict(max_batch=2, max_len=48, seed=0, cache="paged",
+                page_size=16, n_pages=None, swap_bytes=None,
+                preemption=True, prefill_chunk=0, prefill_budget=0,
+                prefix_sharing=False, draft=None, spec_k=None,
+                draft_seed=None)
+    base.update(over)
+    return SimpleNamespace(**base)
+
+
+def test_from_args_spec_flags_require_draft():
+    with pytest.raises(EngineConfigError, match="--spec-k"):
+        EngineConfig.from_args(_args(spec_k=4))
+    with pytest.raises(EngineConfigError,
+                       match="--spec-k/--draft-seed have no effect"):
+        EngineConfig.from_args(_args(spec_k=4, draft_seed=1))
+
+
+def test_from_args_mapping_and_strict_validation(arch):
+    ecfg = EngineConfig.from_args(
+        _args(cache="paged-compressed", prefill_chunk=8), arch)
+    assert ecfg.cache_mode == "paged" and ecfg.compress_cold
+    assert ecfg.prefill_chunk == 8 and ecfg.prefill_budget == 8
+    assert ecfg.spec_k == 4                  # default when flag unset
+    # incompatible feature requests fail at parse time, not in the engine
+    with pytest.raises(EngineConfigError, match="prefix_sharing"):
+        EngineConfig.from_args(_args(prefix_sharing=True), arch)
+
+
+def test_from_args_engine_round_trip(world):
+    """args -> from_args -> engine: the engine serves the resolved
+    config and generates."""
+    params, arch = world
+    ecfg = EngineConfig.from_args(_args(prefill_chunk=8), arch)
+    eng = GenerationEngine(params, arch, config=ecfg)
+    assert eng.config == ecfg and eng.prefill_chunk == 8
+    r = Request(prompt=[1, 2, 3], max_new_tokens=3, id=7_500)
+    eng.submit(r)
+    eng.run()
+    assert r.done and len(r.out_tokens) == 3
+
+
+# -- constructor paths -----------------------------------------------------
+
+def test_legacy_kwargs_deprecated_but_equivalent(world):
+    params, arch = world
+    with pytest.deprecated_call(match="EngineConfig"):
+        legacy = GenerationEngine(params, arch, max_batch=2, max_len=32)
+    modern = GenerationEngine(params, arch,
+                              config=EngineConfig(max_batch=2, max_len=32))
+    assert legacy.config == modern.config
+    a, b = (Request(prompt=[1, 2], max_new_tokens=3, id=7_600)
+            for _ in range(2))
+    legacy.submit(a), legacy.run()
+    modern.submit(b), modern.run()
+    assert a.out_tokens == b.out_tokens
+
+
+def test_legacy_kwargs_still_gated(world):
+    """The deprecation shim routes through the same gating matrix."""
+    params, arch = world
+    with pytest.deprecated_call():
+        with pytest.warns(UserWarning, match="prefix_sharing"):
+            eng = GenerationEngine(params, arch, max_batch=2, max_len=32,
+                                   prefix_sharing=True)
+    assert eng.prefix_sharing is False
+
+
+def test_config_and_legacy_kwargs_are_exclusive(world):
+    params, arch = world
+    with pytest.raises(TypeError, match="config"):
+        GenerationEngine(params, arch, config=EngineConfig(), max_batch=2)
+
+
+def test_draft_params_and_cfg_must_travel_together(world):
+    params, arch = world
+    with pytest.raises(ValueError, match="together"):
+        GenerationEngine(
+            params, arch,
+            config=EngineConfig(draft_cfg=smoke_variant(get("qwen3-8b"))))

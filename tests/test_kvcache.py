@@ -23,7 +23,7 @@ from repro.core import theory
 from repro.kvcache import OutOfPages, PagedKVCache, codec, kernels
 from repro.models import model as M
 from repro.runtime.monitor import KVCacheMonitor
-from repro.serving import GenerationEngine, Request
+from repro.serving import EngineConfig, GenerationEngine, Request
 from repro.serving.engine import splice_fragment
 
 
@@ -148,7 +148,7 @@ def test_engine_paged_bit_identical_to_monolithic():
     prompts, news = _mixed_stream()
 
     def run(**kw):
-        eng = GenerationEngine(params, cfg, max_batch=2, max_len=64, **kw)
+        eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=2, max_len=64, **kw))
         reqs = [Request(prompt=p, max_new_tokens=n)
                 for p, n in zip(prompts, news)]
         for r in reqs:
@@ -209,7 +209,7 @@ def test_engine_undersized_pool_serializes_admission():
     prompts = [[i + 1] * 9 for i in range(3)]
 
     def run(**kw):
-        eng = GenerationEngine(params, cfg, max_batch=2, max_len=32, **kw)
+        eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=2, max_len=32, **kw))
         reqs = [Request(prompt=p, max_new_tokens=7) for p in prompts]
         for r in reqs:
             eng.submit(r)
@@ -268,7 +268,7 @@ def test_engine_sharded_paged_bit_identical_to_monolithic():
         from jax.sharding import Mesh
         from repro.configs import get, smoke_variant
         from repro.models import model as M
-        from repro.serving import GenerationEngine, Request
+        from repro.serving import EngineConfig, GenerationEngine, Request
 
         cfg = smoke_variant(get('qwen3-8b'))
         params = M.init_params(jax.random.PRNGKey(0), cfg)
@@ -277,8 +277,8 @@ def test_engine_sharded_paged_bit_identical_to_monolithic():
         news = [18, 12, 10, 8, 9, 6]
 
         def run(mesh=None, **kw):
-            eng = GenerationEngine(params, cfg, max_batch=4, max_len=64,
-                                   mesh=mesh, **kw)
+            eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=4, max_len=64,
+                                   mesh=mesh, **kw))
             reqs = [Request(prompt=p, max_new_tokens=n)
                     for p, n in zip(prompts, news)]
             for r in reqs:
@@ -438,8 +438,8 @@ def test_paged_memory_stats_beat_monolithic():
     cfg = smoke_variant(get("qwen3-8b"))
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     mon = KVCacheMonitor()
-    eng = GenerationEngine(params, cfg, max_batch=4, max_len=64,
-                           page_size=16, compress_cold=True, kv_monitor=mon)
+    eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=4, max_len=64,
+                           page_size=16, compress_cold=True, kv_monitor=mon))
     for i in range(6):
         eng.submit(Request(prompt=[i + 1, i + 2], max_new_tokens=6))
     eng.run()

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.configs import get, smoke_variant
 from repro.kvcache import OutOfPages, PagedKVCache, SwapStore
 from repro.models import model as M
-from repro.serving import GenerationEngine, Request
+from repro.serving import EngineConfig, GenerationEngine, Request
 
 try:
     from hypothesis import given, strategies as st
@@ -31,8 +31,8 @@ def model():
 
 
 def _serve(params, cfg, reqs, *, max_batch=3, max_len=64, **kw):
-    eng = GenerationEngine(params, cfg, max_batch=max_batch,
-                           max_len=max_len, **kw)
+    eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=max_batch,
+                           max_len=max_len, **kw))
     for r in reqs:
         eng.submit(r)
     eng.run()
@@ -94,9 +94,9 @@ def test_prefix_sharing_one_physical_copy(model):
     count — one copy in device memory, verified on the allocator."""
     params, cfg = model
     prefix = list(range(1, 17))                     # 2 full pages of 8
-    eng = GenerationEngine(params, cfg, max_batch=4, max_len=64,
+    eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=4, max_len=64,
                            cache_mode="paged", page_size=8,
-                           prefill_chunk=32, prefix_sharing=True)
+                           prefill_chunk=32, prefix_sharing=True))
     warm = Request(prompt=prefix + [99], max_new_tokens=2, id=21_000)
     eng.submit(warm)
     eng.run()
@@ -154,8 +154,8 @@ def test_prefix_retire_to_swap_and_fault_back_bit_identical(model):
     off, _ = _serve(params, cfg, _stream(make), **kw)
     # serialize admission so the index is idle when the long prompt lands
     on_reqs = _stream(make)
-    eng = GenerationEngine(params, cfg, max_len=64, prefix_sharing=True,
-                           **kw)
+    eng = GenerationEngine(params, cfg, config=EngineConfig(max_len=64, prefix_sharing=True,
+                           **kw))
     for r in on_reqs:
         eng.submit(r)
         eng.run()

@@ -18,7 +18,7 @@ from conftest import run_subprocess
 from repro.configs import get, smoke_variant
 from repro.models import model as M
 from repro.runtime.monitor import KVCacheMonitor
-from repro.serving import GenerationEngine, Request
+from repro.serving import EngineConfig, GenerationEngine, Request
 from repro.serving.sampler import greedy, sample_logits
 
 try:
@@ -38,7 +38,7 @@ def _ref_greedy(params, cfg, prompt, n):
 def test_engine_matches_full_forward_greedy():
     cfg = smoke_variant(get("qwen3-8b"))
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    eng = GenerationEngine(params, cfg, max_batch=3, max_len=48)
+    eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=3, max_len=48))
     reqs = [Request(prompt=[1, 2, 3, 4], max_new_tokens=5),
             Request(prompt=[5, 6, 7], max_new_tokens=6),
             Request(prompt=[9, 10], max_new_tokens=4),
@@ -55,7 +55,7 @@ def test_engine_matches_full_forward_greedy():
 def test_engine_slot_reuse_and_occupancy():
     cfg = smoke_variant(get("xlstm-350m"))
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    eng = GenerationEngine(params, cfg, max_batch=2, max_len=32)
+    eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=2, max_len=32))
     reqs = [Request(prompt=[i + 1], max_new_tokens=3) for i in range(5)]
     for r in reqs:
         eng.submit(r)
@@ -130,7 +130,7 @@ def test_engine_slot_reclamation_mixed_lengths():
     every request still matches the full-forward greedy reference."""
     cfg = smoke_variant(get("qwen3-8b"))
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    eng = GenerationEngine(params, cfg, max_batch=2, max_len=48)
+    eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=2, max_len=48))
     reqs = [Request(prompt=[i + 1, i + 2, i + 3], max_new_tokens=n)
             for i, n in enumerate([2, 9, 4, 7, 3, 5])]
     for r in reqs:
@@ -153,7 +153,7 @@ def test_run_returns_requests_admitted_before_run():
     from its return value."""
     cfg = smoke_variant(get("qwen3-8b"))
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    eng = GenerationEngine(params, cfg, max_batch=2, max_len=48)
+    eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=2, max_len=48))
     r1 = Request(prompt=[1, 2, 3], max_new_tokens=3)
     r2 = Request(prompt=[4, 5], max_new_tokens=3)
     eng.submit(r1)
@@ -193,7 +193,7 @@ def _oversub_requests(id_base=5_000):
 
 
 def _serve(params, cfg, reqs, **kw):
-    eng = GenerationEngine(params, cfg, max_batch=2, max_len=48, **kw)
+    eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=2, max_len=48, **kw))
     for r in reqs:
         eng.submit(r)
     eng.run()
@@ -243,7 +243,7 @@ def test_priority_classes_preempt_lower_priority_work():
                          cache_mode="monolithic")
         ref[r.id] = mono[0]
 
-    eng = GenerationEngine(params, cfg, max_batch=2, max_len=48, **_OVERSUB)
+    eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=2, max_len=48, **_OVERSUB))
     for r in lo:
         eng.submit(r)
     for _ in range(3):               # both low-priority requests running
@@ -317,8 +317,8 @@ def test_page_boundary_prompt_swap_roundtrip_bit_identical():
                          [Request(prompt=list(prompt), max_new_tokens=10,
                                   id=req.id)],
                          cache_mode="monolithic")
-        eng = GenerationEngine(params, cfg, max_batch=2, max_len=48,
-                               **_OVERSUB)
+        eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=2, max_len=48,
+                               **_OVERSUB))
         eng.submit(req)
         for _ in range(3):
             eng.step()
@@ -405,7 +405,7 @@ def test_chunked_prefill_exactly_one_compile_across_lengths():
     kw = dict(max_batch=2, max_len=40, page_size=8, prefill_chunk=8)
 
     def serve(lens, id_base):
-        eng = GenerationEngine(params, cfg, **kw)
+        eng = GenerationEngine(params, cfg, config=EngineConfig(**kw))
         reqs = [Request(prompt=[(i * 7 + j) % 50 + 1 for j in range(n)],
                         max_new_tokens=3, id=id_base + i)
                 for i, n in enumerate(lens)]
@@ -432,8 +432,8 @@ def test_chunked_midprefill_preempt_resume_bit_identical():
     ref, _ = _serve(params, cfg,
                     [Request(prompt=list(req.prompt), max_new_tokens=8,
                              id=req.id)], cache_mode="monolithic")
-    eng = GenerationEngine(params, cfg, max_batch=2, max_len=48,
-                           prefill_chunk=4, prefill_budget=4, **_OVERSUB)
+    eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=2, max_len=48,
+                           prefill_chunk=4, prefill_budget=4, **_OVERSUB))
     eng.submit(req)
     eng.step()                                   # one 4-token chunk in
     slot = eng.slots.index(req)
@@ -503,7 +503,7 @@ def test_oversubscribed_sharded_bit_identical():
         from repro.configs import get, smoke_variant
         from repro.models import model as M
         from repro.runtime.monitor import KVCacheMonitor
-        from repro.serving import GenerationEngine, Request
+        from repro.serving import EngineConfig, GenerationEngine, Request
 
         cfg = smoke_variant(get('qwen3-8b'))
         params = M.init_params(jax.random.PRNGKey(0), cfg)
@@ -517,8 +517,8 @@ def test_oversubscribed_sharded_bit_identical():
 
         def serve(mesh, **kw):
             mon = KVCacheMonitor()
-            eng = GenerationEngine(params, cfg, max_batch=4, max_len=48,
-                                   kv_monitor=mon, mesh=mesh, **kw)
+            eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=4, max_len=48,
+                                   kv_monitor=mon, mesh=mesh, **kw))
             reqs = stream()
             for r in reqs:
                 eng.submit(r)
@@ -556,7 +556,7 @@ def test_chunked_prefill_sharded_bit_identical():
         from jax.sharding import Mesh
         from repro.configs import get, smoke_variant
         from repro.models import model as M
-        from repro.serving import GenerationEngine, Request
+        from repro.serving import EngineConfig, GenerationEngine, Request
 
         cfg = smoke_variant(get('qwen3-8b'))
         params = M.init_params(jax.random.PRNGKey(0), cfg)
@@ -569,8 +569,8 @@ def test_chunked_prefill_sharded_bit_identical():
                         zip(prompts, news, prios))]
 
         def serve(mesh, reqs, **kw):
-            eng = GenerationEngine(params, cfg, max_batch=4, max_len=48,
-                                   mesh=mesh, **kw)
+            eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=4, max_len=48,
+                                   mesh=mesh, **kw))
             for r in reqs:
                 eng.submit(r)
             eng.run()

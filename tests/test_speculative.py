@@ -28,7 +28,7 @@ from conftest import run_subprocess
 from repro.configs import get, smoke_variant
 from repro.kvcache import PagedKVCache
 from repro.models import model as M
-from repro.serving import GenerationEngine, Request, spec
+from repro.serving import EngineConfig, GenerationEngine, Request, spec
 from repro.serving.sampler import request_key, residual_probs, sample_logits
 
 try:
@@ -56,7 +56,7 @@ def _stream(temps=(0.0,)):
 
 
 def _serve(params, cfg, reqs, **kw):
-    eng = GenerationEngine(params, cfg, max_batch=3, max_len=64, **kw)
+    eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=3, max_len=64, **kw))
     for r in reqs:
         eng.submit(r)
     eng.run()
@@ -114,10 +114,10 @@ def test_spec_under_forced_preemption_and_pressure():
 
     def serve(spec_on, **kw):
         eng = GenerationEngine(
-            params, cfg, max_batch=2, max_len=64, page_size=4, n_pages=10,
+            params, cfg, config=EngineConfig(max_batch=2, max_len=64, page_size=4, n_pages=10,
             swap_bytes=-1,
             **(dict(draft_params=dparams, draft_cfg=dcfg, spec_k=4)
-               if spec_on else {}), **kw)
+               if spec_on else {}), **kw))
         rs = reqs()
         for r in rs:
             eng.submit(r)
@@ -146,14 +146,14 @@ def test_spec_gating_falls_back_to_target_only():
     params, dparams = _params(cfg, 0), _params(dcfg, 1)
     for kw in (dict(cache_mode="monolithic"), dict(prefill_chunk=16)):
         with pytest.warns(UserWarning, match="speculative"):
-            eng = GenerationEngine(params, cfg, max_batch=2, max_len=64,
+            eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=2, max_len=64,
                                    draft_params=dparams, draft_cfg=dcfg,
-                                   **kw)
+                                   **kw))
         assert not eng.spec_on
     bad = replace(dcfg, vocab_size=dcfg.vocab_size * 2)
     with pytest.warns(UserWarning, match="speculative"):
-        eng = GenerationEngine(params, cfg, max_batch=2, max_len=64,
-                               draft_params=_params(bad, 1), draft_cfg=bad)
+        eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=2, max_len=64,
+                               draft_params=_params(bad, 1), draft_cfg=bad))
     assert not eng.spec_on
     r = Request(prompt=[1, 2, 3], max_new_tokens=4, id=42_000)
     eng.submit(r)
@@ -407,7 +407,7 @@ def test_spec_sharded_data_mesh_bit_identical():
         from jax.sharding import Mesh
         from repro.configs import get, smoke_variant
         from repro.models import model as M
-        from repro.serving import GenerationEngine, Request
+        from repro.serving import EngineConfig, GenerationEngine, Request
 
         cfg = smoke_variant(get('qwen3-8b'))
         dcfg = smoke_variant(get('xlstm-350m'))
@@ -420,8 +420,8 @@ def test_spec_sharded_data_mesh_bit_identical():
                     for i in range(4)]
 
         def serve(mesh, **kw):
-            eng = GenerationEngine(params, cfg, max_batch=2, max_len=64,
-                                   mesh=mesh, **kw)
+            eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=2, max_len=64,
+                                   mesh=mesh, **kw))
             reqs = stream()
             for r in reqs:
                 eng.submit(r)

@@ -25,7 +25,7 @@ from repro.runtime.tracing import (ENGINE_TRACK, RequestStateTracker,
                                    SpanTracer, request_track)
 from repro.runtime.trace_export import (build_trace, export_chrome_trace,
                                         validate_chrome_trace)
-from repro.serving import GenerationEngine, Request
+from repro.serving import EngineConfig, GenerationEngine, Request
 from repro.serving.telemetry import (Counter, Gauge, Histogram,
                                      MetricsRegistry, Telemetry,
                                      geometric_edges, linear_edges,
@@ -210,7 +210,7 @@ def _anchor_requests():
 
 
 def _serve(params, cfg, reqs, **kw):
-    eng = GenerationEngine(params, cfg, max_batch=2, max_len=48, **kw)
+    eng = GenerationEngine(params, cfg, config=EngineConfig(max_batch=2, max_len=48, **kw))
     for r in reqs:
         eng.submit(r)
     eng.run()

@@ -10,11 +10,16 @@ Two checks keep the docs/ subsystem from rotting:
   2. **Doctests**: the worked byte-level example in ``docs/FORMATS.md``
      is executed (``doctest``), so the spec's claims about the actual
      bitstreams stay true against the code.
+  3. **API surface**: every name in ``repro.serving.__all__`` (parsed
+     from the source with ``ast`` — no import needed) must appear in
+     ``docs/API.md``, so the stable-surface doc cannot silently drift
+     from the package.
 
 Usage:  python tools/check_docs.py   (exit 0 = clean)
 """
 from __future__ import annotations
 
+import ast
 import doctest
 import os
 import re
@@ -73,14 +78,37 @@ def run_doctests() -> list[str]:
     return []
 
 
+def check_api_surface() -> list[str]:
+    """Every ``repro.serving.__all__`` name must appear in docs/API.md."""
+    init = os.path.join(REPO, "src", "repro", "serving", "__init__.py")
+    api = os.path.join(REPO, "docs", "API.md")
+    if not os.path.exists(api):
+        return ["docs/API.md is missing"]
+    with open(init, encoding="utf-8") as fh:
+        tree = ast.parse(fh.read(), init)
+    names: list[str] = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign)
+                and any(isinstance(t, ast.Name) and t.id == "__all__"
+                        for t in node.targets)):
+            names = [ast.literal_eval(elt) for elt in node.value.elts]
+    if not names:
+        return ["repro/serving/__init__.py: no __all__ found"]
+    with open(api, encoding="utf-8") as fh:
+        doc = fh.read()
+    return [f"docs/API.md: public name {n!r} from repro.serving.__all__ "
+            f"is undocumented" for n in names if n not in doc]
+
+
 def main() -> int:
-    errors = check_links() + run_doctests()
+    errors = check_links() + run_doctests() + check_api_surface()
     for e in errors:
         print(f"[check_docs] {e}", file=sys.stderr)
     if not errors:
         n = len(md_files())
         print(f"[check_docs] OK: links in {n} markdown files resolve, "
-              f"FORMATS.md doctests pass")
+              f"FORMATS.md doctests pass, serving __all__ covered by "
+              f"API.md")
     return 1 if errors else 0
 
 
