@@ -76,8 +76,10 @@ def _decode_chunk_kernel(limit_ref, first_ref, offset_ref, perm_ref,
         # emit fp8 byte = sign | exponent | mantissa
         sm_s = jax.lax.dynamic_slice_in_dim(sm, s, 1, axis=0).astype(jnp.int32)
         byte = ((sm_s & 8) << 4) | (sym << 3) | (sm_s & 7)
-        pl.store(out_ref, (0, pl.dslice(s, 1), slice(None)),
-                 byte.astype(jnp.uint8).reshape(1, LANES))
+        # all-slice index: a bare int leading index breaks interpret
+        # mode's discharge rule on some jax versions
+        pl.store(out_ref, (pl.dslice(0, 1), pl.dslice(s, 1), slice(None)),
+                 byte.astype(jnp.uint8).reshape(1, 1, LANES))
 
         # shift and refill (<= 1 byte/round keeps bits_valid >= 24)
         win = win << length.astype(jnp.uint32)

@@ -83,7 +83,9 @@ def main(argv=None):
         start_step = int(restored["step"]) + 1
         print(f"[train] resumed from step {at} -> starting at {start_step}")
 
-    step_fn = jax.jit(make_train_step(
+    # one jit per training process (no re-entry): a module cache would
+    # only pin the closure alive
+    step_fn = jax.jit(make_train_step(  # lint: disable=jit-cache-discipline
         cfg, AdamWConfig(lr=args.lr), mesh=mesh,
         grad_accum=args.grad_accum, remat=True,
         warmup_steps=max(args.steps // 20, 1), total_steps=args.steps))

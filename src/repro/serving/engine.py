@@ -90,7 +90,7 @@ from repro.models import model as M
 from repro.runtime import sharding as SH
 from . import spec as SPEC
 from .config import EngineConfig
-from .sampler import greedy, request_key, sample_logits
+from .sampler import greedy, request_key, root_key, sample_logits
 from .scheduler import Preempted, Scheduler
 
 _ids = itertools.count()
@@ -290,7 +290,7 @@ class GenerationEngine:
         # sampling keys fold (rng_seed, request.id, position) — the token
         # stream of a sampled request is a pure function of its own state,
         # independent of batching, scheduling and preemption
-        self.rng0 = jax.random.PRNGKey(config.rng_seed)
+        self.rng0 = root_key(config.rng_seed)
         self._decode, self._prefill = _jitted_steps(cfg, mesh, max_len)
         self._chunk = (_jitted_chunk(cfg, mesh, max_len, chunk)
                        if chunk else None)
@@ -657,15 +657,17 @@ class GenerationEngine:
         paired draft row stashed into ``Preempted.draft_state`` when the
         target slot is preempted (preempting one preempts both)."""
         flat, _ = jax.tree_util.tree_flatten_with_path(self.draft_cache)
-        out = []
+        slices = []
         for path, leaf in flat:
             names, axis = self._draft_leaf_axis(path)
             if "cur_len" in names:
-                out.append(np.asarray(leaf[slot]))
+                slices.append(leaf[slot])
             else:
-                out.append(np.asarray(jax.lax.dynamic_slice_in_dim(
-                    leaf, slot, 1, axis=axis)))
-        return out
+                slices.append(jax.lax.dynamic_slice_in_dim(
+                    leaf, slot, 1, axis=axis))
+        # one transfer for the whole row: the preemption path's host
+        # sync count stays independent of the pytree size
+        return jax.device_get(slices)
 
     def _draft_restore(self, slot: int, snap: list):
         """Inverse of :func:`_draft_snapshot` (bit-exact: the row never
@@ -775,7 +777,10 @@ class GenerationEngine:
                     return sample_logits(row[None] / t, key,
                                          temperature=1.0)[0, 0]
 
-                got = np.asarray(jax.vmap(draw)(rows, ids, pos, temps))
+                # the per-iteration sync is inherent: draft step j+1
+                # consumes step j's token (already batched over slots)
+                got = np.asarray(jax.vmap(draw)(  # lint: disable=eager-loop-sync
+                    rows, ids, pos, temps))
                 for s, g in zip(samp, got.tolist()):
                     nxt[s, 0] = g
             props[:, j - 1] = nxt[:, 0]

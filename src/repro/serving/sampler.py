@@ -18,6 +18,16 @@ def greedy(logits):
     return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
 
 
+def root_key(seed: int):
+    """The engine's root PRNG key.  The single registered construction
+    site for serving key material: everything downstream derives from
+    this key via :func:`request_key` (and the spec-decode
+    ``accept_key``/``residual_key`` wrappers), which is what keeps
+    sampling schedule-invariant — enforced statically by the
+    ``prng-discipline`` lint pass (docs/LINTS.md)."""
+    return jax.random.PRNGKey(seed)
+
+
 def request_key(rng0, req_id, position):
     """The serving engine's per-draw PRNG key: fold (request id, token
     position) into the engine seed.  A request's sampled stream is a pure

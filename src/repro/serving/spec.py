@@ -114,14 +114,27 @@ def verify(p_logits, q_logits, proposals, *, rng0, req_id, pos0: int,
         q_logits = np.asarray(q_logits, np.float32).reshape(n, -1)
         q = np.asarray(jax.nn.softmax(
             jnp.asarray(q_logits) / temperature, axis=-1))
+        # one batched keyed draw covers the whole window's acceptance
+        # uniforms: bit-identical to per-position eager draws (threefry
+        # is a pure per-key counter, vmap over the folded position
+        # changes nothing), but a single device dispatch + transfer
+        # instead of one blocking host sync per proposal
+        us = np.asarray(jax.vmap(
+            lambda i: jax.random.uniform(accept_key(rng0, req_id, pos0 + i))
+        )(jnp.arange(n)))
     out = []
+    rejected = -1
     for i, t in enumerate(proposals):
         t = int(t)
-        u = float(jax.random.uniform(accept_key(rng0, req_id, pos0 + i)))
+        u = float(us[i])
         # accept iff u < min(1, p(t)/q(t))  <=>  u * q(t) < p(t)
         if u * q[i, t] < p[i, t]:
             out.append(t)
             continue
+        rejected = i
+        break
+    if rejected >= 0:
+        i = rejected
         r = residual_probs(jnp.asarray(p[i]), jnp.asarray(q[i]))
         tok = int(jax.random.categorical(
             residual_key(rng0, req_id, pos0 + i), jnp.log(r)))

@@ -36,6 +36,8 @@ def test_scanned_matmul_scales_by_trip_count():
     # XLA's own analysis undercounts by ~T (regression guard for why this
     # module exists)
     xla = jax.jit(fn).lower(x, w).compile().cost_analysis()
+    if isinstance(xla, (list, tuple)):   # older jax returns [dict]
+        xla = xla[0]
     assert float(xla["flops"]) < 0.5 * want
 
 

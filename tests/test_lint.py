@@ -1,0 +1,476 @@
+"""repro-lint framework tests (tools/lint/ — see docs/LINTS.md).
+
+Each pass gets fixture trees with a seeded violation (the pass must
+fire) and a known-good twin (it must stay silent); plus suppression,
+baseline, and cache round-trips, CLI exit semantics, and the live-tree
+self-check that the analyzer's gate (`python -m tools.lint --check`)
+holds on this repo with an empty baseline for serving/ and kvcache/.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
+
+from tools.lint import PASSES, run_lint  # noqa: E402
+from tools.lint.runner import main as lint_main, write_baseline  # noqa: E402
+
+
+def write_tree(root, files):
+    for rel, text in files.items():
+        path = os.path.join(root, rel)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w", encoding="utf-8") as fh:
+            fh.write(textwrap.dedent(text))
+    return root
+
+
+def lint(root, **kw):
+    kw.setdefault("use_cache", False)
+    return run_lint(str(root), **kw)
+
+
+def rules_of(result):
+    return sorted({f.rule for f in result["new"]})
+
+
+# ---------------------------------------------------------------------------
+# jit-discipline
+# ---------------------------------------------------------------------------
+
+def test_jit_cache_discipline_fires_on_uncached_jit(tmp_path):
+    write_tree(tmp_path, {"src/mod.py": """\
+        import jax
+
+        def fn(x):
+            return x
+
+        def hot_path(x):
+            return jax.jit(fn)(x)
+        """})
+    res = lint(tmp_path)
+    assert rules_of(res) == ["jit-cache-discipline"]
+    (f,) = res["new"]
+    assert f.path == "src/mod.py" and "hot_path" in f.message
+
+
+def test_jit_cache_discipline_known_good_shapes(tmp_path):
+    # module level, decorator, cache-store, factory return, AOT .lower
+    write_tree(tmp_path, {"src/mod.py": """\
+        import jax
+        from functools import partial
+
+        _CACHE: dict = {}
+
+        @partial(jax.jit, static_argnames=("n",))
+        def decorated(x, n):
+            return x
+
+        def fn(x):
+            return x
+
+        top = jax.jit(fn)
+
+        def cached(key):
+            if key not in _CACHE:
+                _CACHE[key] = jax.jit(fn)
+            return _CACHE[key]
+
+        def make_step(cfg):
+            def step(x):
+                return x + cfg
+            return jax.jit(step)
+
+        def aot(x):
+            return jax.jit(fn).lower(x)
+        """})
+    res = lint(tmp_path)
+    assert res["new"] == []
+
+
+def test_shard_map_inside_traced_function_is_compliant(tmp_path):
+    write_tree(tmp_path, {"src/mod.py": """\
+        import jax
+        from jax.experimental.shard_map import shard_map
+
+        def inner(x):
+            return shard_map(lambda v: v, mesh=None,
+                             in_specs=None, out_specs=None)(x)
+
+        @jax.jit
+        def entry(x):
+            return inner(x)
+        """})
+    assert lint(tmp_path)["new"] == []
+
+
+def test_jit_host_sync_fires_inside_traced_body(tmp_path):
+    write_tree(tmp_path, {"src/mod.py": """\
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        @jax.jit
+        def traced(x):
+            y = jnp.exp(x)
+            return float(y), np.asarray(jnp.cumsum(y)), y.sum().item()
+        """})
+    res = lint(tmp_path)
+    assert rules_of(res) == ["jit-host-sync"]
+    msgs = " | ".join(f.message for f in res["new"])
+    assert "float" in msgs and "np.asarray" in msgs and ".item()" in msgs
+
+
+def test_jit_host_sync_ignores_static_config_math(tmp_path):
+    # np over config attrs / mesh shapes is host-static, never flagged
+    write_tree(tmp_path, {"src/mod.py": """\
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def traced(x, cfg):
+            scale = np.sqrt(cfg.d_model)
+            n = int(np.prod([4, 8]))
+            return x * scale * n
+        """})
+    assert lint(tmp_path)["new"] == []
+
+
+def test_eager_loop_sync_fires_in_serving_host_loop(tmp_path):
+    write_tree(tmp_path, {"src/repro/serving/mod.py": """\
+        import jax
+        import jax.numpy as jnp
+
+        def host_loop(keys):
+            out = []
+            for k in keys:
+                out.append(float(jax.random.uniform(k)))
+            return out
+        """})
+    res = lint(tmp_path)
+    assert rules_of(res) == ["eager-loop-sync"]
+
+
+def test_eager_loop_sync_silent_on_hoisted_batch_draw(tmp_path):
+    write_tree(tmp_path, {"src/repro/serving/mod.py": """\
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        def host_loop(keys):
+            us = np.asarray(jax.vmap(jax.random.uniform)(jnp.stack(keys)))
+            return [float(u) for u in us.tolist()]
+        """})
+    assert lint(tmp_path)["new"] == []
+
+
+# ---------------------------------------------------------------------------
+# prng-discipline
+# ---------------------------------------------------------------------------
+
+def test_prng_raw_key_fires_in_serving(tmp_path):
+    write_tree(tmp_path, {"src/repro/serving/mod.py": """\
+        import jax
+
+        def draw(seed, i):
+            key = jax.random.split(jax.random.PRNGKey(seed))[0]
+            return jax.random.fold_in(key, i)
+        """})
+    res = lint(tmp_path)
+    assert rules_of(res) == ["prng-raw-key"]
+    assert len(res["new"]) == 3           # PRNGKey + split + fold_in
+
+
+def test_prng_helper_definitions_and_keyed_draws_are_exempt(tmp_path):
+    write_tree(tmp_path, {"src/repro/serving/sampler.py": """\
+        import jax
+
+        def root_key(seed):
+            return jax.random.PRNGKey(seed)
+
+        def request_key(rng0, req_id, position):
+            return jax.random.fold_in(jax.random.fold_in(rng0, req_id),
+                                      position)
+
+        def sample(logits, rng0, req_id, pos):
+            return jax.random.categorical(request_key(rng0, req_id, pos),
+                                          logits)
+        """})
+    assert lint(tmp_path)["new"] == []
+
+
+def test_prng_unkeyed_draw_fires_on_unregistered_helper(tmp_path):
+    write_tree(tmp_path, {"src/repro/serving/mod.py": """\
+        import jax
+
+        def my_key(i):
+            return i
+
+        def draw(logits, i):
+            return jax.random.categorical(my_key(i), logits)
+        """})
+    res = lint(tmp_path)
+    assert rules_of(res) == ["prng-unkeyed-draw"]
+
+
+def test_prng_pass_ignores_non_serving_code(tmp_path):
+    write_tree(tmp_path, {"src/repro/launch/mod.py": """\
+        import jax
+
+        def init(seed):
+            return jax.random.PRNGKey(seed)
+        """})
+    assert lint(tmp_path)["new"] == []
+
+
+# ---------------------------------------------------------------------------
+# refcount-pairing
+# ---------------------------------------------------------------------------
+
+def test_refcount_leak_on_raise_fires(tmp_path):
+    write_tree(tmp_path, {"src/repro/kvcache/paged.py": """\
+        class Pool:
+            def admit(self, n):
+                pids = [self._alloc_raw(16) for _ in range(n)]
+                if n > self.capacity:
+                    raise OutOfPages(n)
+                return pids
+        """})
+    res = lint(tmp_path)
+    assert rules_of(res) == ["refcount-leak-on-raise"]
+
+
+def test_refcount_undo_loop_and_early_raise_are_compliant(tmp_path):
+    write_tree(tmp_path, {"src/repro/kvcache/paged.py": """\
+        class Pool:
+            def admit_shared(self, n):
+                if n > self.capacity:
+                    raise OutOfPages(n)          # before any acquire
+                taken = []
+                for pid in range(n):
+                    self._incref(pid)
+                    taken.append(pid)
+                if self.broken:
+                    for pid in taken:            # the undo loop
+                        self._decref(pid)
+                    raise OutOfPages(n)
+                return taken
+
+            def admit_guarded(self, n):
+                pid = self._alloc_raw(16)
+                try:
+                    self.commit(pid)
+                finally:
+                    if not self.committed:
+                        self._decref(pid)
+                return pid
+
+            def admit_unchecked(self, n):
+                pid = self._alloc_raw(16)
+                if self.late_check:
+                    # caller releases on this exception (documented)
+                    raise RuntimeError(n)  # lint: disable=refcount-leak-on-raise
+                return pid
+        """})
+    res = lint(tmp_path)
+    assert res["new"] == [] and res["suppressed"] == 1
+
+
+def test_refcount_cleanup_in_enclosing_try_is_compliant(tmp_path):
+    write_tree(tmp_path, {"src/repro/kvcache/paged.py": """\
+        class Pool:
+            def fault(self, n):
+                pid = self._alloc_raw(16)
+                try:
+                    if n > self.capacity:
+                        raise OutOfPages(n)
+                except OutOfPages:
+                    self._decref(pid)
+                    raise
+                return pid
+        """})
+    assert lint(tmp_path)["new"] == []
+
+
+# ---------------------------------------------------------------------------
+# async-blocking
+# ---------------------------------------------------------------------------
+
+def test_async_blocking_call_fires(tmp_path):
+    write_tree(tmp_path, {"src/repro/serving/async_engine.py": """\
+        import time
+
+        async def step(self):
+            time.sleep(0.1)
+            with open("/tmp/x") as fh:
+                return fh.read()
+        """})
+    res = lint(tmp_path)
+    assert rules_of(res) == ["async-blocking-call"]
+    assert len(res["new"]) == 2           # time.sleep + open
+
+
+def test_async_sync_step_without_cooperative_await_fires(tmp_path):
+    write_tree(tmp_path, {"src/repro/serving/async_engine.py": """\
+        async def drain(self):
+            while self.pending:
+                self.eng.step()
+        """})
+    res = lint(tmp_path)
+    assert rules_of(res) == ["async-sync-step"]
+
+
+def test_async_cooperative_step_loop_is_compliant(tmp_path):
+    # the AsyncServingFrontend pattern: sync step + sleep(0) yield
+    write_tree(tmp_path, {"src/repro/serving/async_engine.py": """\
+        import asyncio
+
+        async def step(self):
+            for eng in self.engines:
+                eng.step()
+                await asyncio.sleep(0)
+
+        async def drain(self):
+            while await self.step():
+                pass
+        """})
+    assert lint(tmp_path)["new"] == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions / baseline / cache / CLI
+# ---------------------------------------------------------------------------
+
+BAD_SERVING = {"src/repro/serving/mod.py": """\
+    import jax
+
+    def init(seed):
+        return jax.random.PRNGKey(seed)
+    """}
+
+
+def test_inline_suppression_round_trip(tmp_path):
+    write_tree(tmp_path, {"src/repro/serving/mod.py": """\
+        import jax
+
+        def init(seed):
+            return jax.random.PRNGKey(seed)  # lint: disable=prng-raw-key
+
+        def init2(seed):
+            return jax.random.PRNGKey(seed)  # lint: disable=all
+        """})
+    res = lint(tmp_path)
+    assert res["new"] == [] and res["suppressed"] == 2
+
+
+def test_suppression_of_other_rule_does_not_hide(tmp_path):
+    write_tree(tmp_path, {"src/repro/serving/mod.py": """\
+        import jax
+
+        def init(seed):
+            return jax.random.PRNGKey(seed)  # lint: disable=jit-host-sync
+        """})
+    res = lint(tmp_path)
+    assert rules_of(res) == ["prng-raw-key"] and res["suppressed"] == 0
+
+
+def test_baseline_round_trip(tmp_path):
+    write_tree(tmp_path, BAD_SERVING)
+    baseline = str(tmp_path / "baseline.json")
+    first = lint(tmp_path, baseline_path=baseline)
+    assert len(first["new"]) == 1
+    write_baseline(first, baseline)
+    second = lint(tmp_path, baseline_path=baseline)
+    assert second["new"] == []
+    assert [f.baselined for f in second["findings"]] == [True]
+    # a *new* violation still surfaces through the baseline
+    write_tree(tmp_path, {"src/repro/serving/other.py": """\
+        import jax
+
+        def more(seed):
+            return jax.random.PRNGKey(seed)
+        """})
+    third = lint(tmp_path, baseline_path=baseline)
+    assert len(third["new"]) == 1
+    assert third["new"][0].path == "src/repro/serving/other.py"
+
+
+def test_cache_round_trip_and_invalidation(tmp_path):
+    write_tree(tmp_path, BAD_SERVING)
+    warm = run_lint(str(tmp_path), use_cache=True)
+    assert len(warm["new"]) == 1
+    assert os.path.exists(tmp_path / ".lint_cache.json")
+    cached = run_lint(str(tmp_path), use_cache=True)
+    assert [f.fingerprint() for f in cached["new"]] == \
+           [f.fingerprint() for f in warm["new"]]
+    # editing the file invalidates its entry: the fix is picked up
+    write_tree(tmp_path, {"src/repro/serving/mod.py": """\
+        def init(seed):
+            return seed
+        """})
+    fixed = run_lint(str(tmp_path), use_cache=True)
+    assert fixed["new"] == []
+
+
+def test_select_and_skip(tmp_path):
+    write_tree(tmp_path, BAD_SERVING)
+    assert rules_of(lint(tmp_path, select=["prng-discipline"])) == \
+        ["prng-raw-key"]
+    assert lint(tmp_path, select=["refcount-pairing"])["new"] == []
+    assert lint(tmp_path, skip=["prng-discipline"])["new"] == []
+
+
+def test_cli_exit_codes_and_json_report(tmp_path, capsys):
+    write_tree(tmp_path, BAD_SERVING)
+    out = str(tmp_path / "report.json")
+    rc = lint_main(["--root", str(tmp_path), "--check", "--no-cache",
+                    "--json-out", out])
+    assert rc == 1
+    report = json.load(open(out))
+    assert report["new"] == 1
+    assert report["findings"][0]["rule"] == "prng-raw-key"
+    rc = lint_main(["--root", str(tmp_path), "--check", "--no-cache",
+                    "--skip", "prng-discipline"])
+    assert rc == 0
+    capsys.readouterr()
+
+
+def test_parse_error_is_reported_not_crashed(tmp_path):
+    write_tree(tmp_path, {"src/bad.py": "def broken(:\n"})
+    res = lint(tmp_path)
+    assert rules_of(res) == ["parse-error"]
+
+
+# ---------------------------------------------------------------------------
+# live tree
+# ---------------------------------------------------------------------------
+
+def test_registry_has_the_documented_passes():
+    assert {"jit-discipline", "prng-discipline", "refcount-pairing",
+            "async-blocking", "surface-docs",
+            "surface-metrics"} <= set(PASSES)
+
+
+def test_live_tree_is_clean():
+    # the CI gate: no new findings on this repo (surface passes run in
+    # their own jobs/tests and need a working jax install; the AST
+    # passes are the ones this check pins)
+    res = run_lint(REPO, use_cache=False,
+                   skip=["surface-docs", "surface-metrics"])
+    assert res["new"] == [], "\n".join(f.format() for f in res["new"])
+
+
+def test_live_baseline_is_empty_for_serving_and_kvcache():
+    with open(os.path.join(REPO, "tools", "lint", "baseline.json")) as fh:
+        entries = json.load(fh)["findings"]
+    offenders = [e for e in entries
+                 if e["path"].startswith(("src/repro/serving/",
+                                          "src/repro/kvcache/"))]
+    assert offenders == []

@@ -17,7 +17,11 @@ from repro.runtime.steps import param_specs
 
 def _mesh16():
     from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    try:
+        return AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:
+        # older jax: AbstractMesh(shape_tuple) with (name, size) pairs
+        return AbstractMesh((("data", 16), ("model", 16)))
 
 
 def test_param_rules_structure():

@@ -1,0 +1,1 @@
+"""Repo tooling (``tools.lint`` + thin compat CLI wrappers)."""

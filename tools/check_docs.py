@@ -1,103 +1,41 @@
-"""Docs hygiene gate (run by the CI ``docs`` job and tests/test_docs.py).
+"""Docs hygiene gate — thin compatibility wrapper.
 
-Two checks keep the docs/ subsystem from rotting:
-
-  1. **Links**: every intra-repo Markdown link (``[text](path)`` with a
-     relative target) in every tracked ``*.md`` file must resolve to an
-     existing file or directory.  External (``http(s)://``, ``mailto:``)
-     and pure-anchor (``#...``) targets are ignored; a ``#fragment``
-     suffix on a file target is stripped before the existence check.
-  2. **Doctests**: the worked byte-level example in ``docs/FORMATS.md``
-     is executed (``doctest``), so the spec's claims about the actual
-     bitstreams stay true against the code.
-  3. **API surface**: every name in ``repro.serving.__all__`` (parsed
-     from the source with ``ast`` — no import needed) must appear in
-     ``docs/API.md``, so the stable-surface doc cannot silently drift
-     from the package.
+The checks now live in the unified analyzer as the ``surface-docs``
+pass (``tools/lint/passes/surface.py``; run via ``python -m tools.lint``).
+This wrapper keeps the historical entry points working — the CI ``docs``
+job and tests/test_docs.py load this file by path and call
+``check_links()`` / ``run_doctests()`` / ``check_api_surface()`` with no
+arguments.
 
 Usage:  python tools/check_docs.py   (exit 0 = clean)
 """
 from __future__ import annotations
 
-import ast
-import doctest
 import os
-import re
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-SKIP_DIRS = {".git", ".github", "__pycache__", ".pytest_cache", "node_modules"}
-# [text](target) — target captured up to the first unescaped ')'
-_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-_EXTERNAL = ("http://", "https://", "mailto:")
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
 
+from tools.lint.passes import surface as _surface  # noqa: E402
 
-def md_files() -> list[str]:
-    out = []
-    for root, dirs, files in os.walk(REPO):
-        dirs[:] = [d for d in dirs if d not in SKIP_DIRS]
-        out.extend(os.path.join(root, f) for f in files if f.endswith(".md"))
-    return sorted(out)
+md_files = lambda: _surface.md_files(REPO)
 
 
 def check_links() -> list[str]:
     """Return human-readable error strings for dangling intra-repo links."""
-    errors = []
-    for path in md_files():
-        with open(path, encoding="utf-8") as fh:
-            text = fh.read()
-        # fenced code blocks may contain ``[x](y)``-looking noise
-        text = re.sub(r"```.*?```", "", text, flags=re.S)
-        for m in _LINK.finditer(text):
-            target = m.group(1)
-            if target.startswith(_EXTERNAL) or target.startswith("#"):
-                continue
-            target = target.split("#", 1)[0]
-            if not target:
-                continue
-            resolved = os.path.normpath(
-                os.path.join(os.path.dirname(path), target))
-            if not os.path.exists(resolved):
-                rel = os.path.relpath(path, REPO)
-                errors.append(f"{rel}: dangling link -> {m.group(1)}")
-    return errors
+    return _surface.check_links(REPO)
 
 
 def run_doctests() -> list[str]:
     """Doctest docs/FORMATS.md; returns error strings (empty = pass)."""
-    sys.path.insert(0, os.path.join(REPO, "src"))
-    spec = os.path.join(REPO, "docs", "FORMATS.md")
-    if not os.path.exists(spec):
-        return ["docs/FORMATS.md is missing"]
-    res = doctest.testfile(spec, module_relative=False, verbose=False)
-    if res.failed:
-        return [f"docs/FORMATS.md: {res.failed}/{res.attempted} "
-                f"doctests failed"]
-    if not res.attempted:
-        return ["docs/FORMATS.md: no doctests found (worked example gone?)"]
-    return []
+    return _surface.run_doctests(REPO)
 
 
 def check_api_surface() -> list[str]:
     """Every ``repro.serving.__all__`` name must appear in docs/API.md."""
-    init = os.path.join(REPO, "src", "repro", "serving", "__init__.py")
-    api = os.path.join(REPO, "docs", "API.md")
-    if not os.path.exists(api):
-        return ["docs/API.md is missing"]
-    with open(init, encoding="utf-8") as fh:
-        tree = ast.parse(fh.read(), init)
-    names: list[str] = []
-    for node in ast.walk(tree):
-        if (isinstance(node, ast.Assign)
-                and any(isinstance(t, ast.Name) and t.id == "__all__"
-                        for t in node.targets)):
-            names = [ast.literal_eval(elt) for elt in node.value.elts]
-    if not names:
-        return ["repro/serving/__init__.py: no __all__ found"]
-    with open(api, encoding="utf-8") as fh:
-        doc = fh.read()
-    return [f"docs/API.md: public name {n!r} from repro.serving.__all__ "
-            f"is undocumented" for n in names if n not in doc]
+    return _surface.check_api_surface(REPO)
 
 
 def main() -> int:

@@ -1,74 +1,33 @@
-"""Metric-name lint (run by the CI ``docs`` job and tests/test_telemetry.py).
+"""Metric-name lint — thin compatibility wrapper.
 
-Every metric name emitted in ``src/`` — a string literal passed to
-``.counter("...")`` / ``.gauge("...")`` / ``.histogram("...")``, which
-covers both registry instruments and tracer counter tracks — must be
-documented in ``docs/OBSERVABILITY.md``.  Dynamically built names (the
-``kvstat_<key>`` forwarding namespace, ``STAT_PREFIX + k``) are not
-string literals and are exempt from the per-name check, but the doc must
-still describe the ``kvstat_`` namespace itself.
-
-The check is textual on purpose: it needs no imports, runs in the docs
-CI job without installing the package, and fails the moment someone
-adds a metric without telling the one place operators look names up.
+The check now lives in the unified analyzer as the ``surface-metrics``
+pass (``tools/lint/passes/surface.py``; run via ``python -m tools.lint``).
+This wrapper keeps the historical entry points working — the CI ``docs``
+job and tests/test_telemetry.py load this file by path and call
+``emitted_names()`` / ``check_metrics()`` with no arguments.
 
 Usage:  python tools/check_metrics.py   (exit 0 = clean)
 """
 from __future__ import annotations
 
 import os
-import re
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DOC = os.path.join(REPO, "docs", "OBSERVABILITY.md")
-SRC = os.path.join(REPO, "src")
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
 
-# .counter("name" / .gauge("name" / .histogram("name" — emission sites only
-# (reads go through .get("...") / .value("...") and are not required here).
-# \s* spans newlines: wrapped calls like ``.counter(\n    "name")`` count.
-_EMIT = re.compile(
-    r"\.(?:counter|gauge|histogram)\(\s*['\"]([A-Za-z0-9_.]+)['\"]")
+from tools.lint.passes import surface as _surface  # noqa: E402
 
 
 def emitted_names() -> dict[str, list[str]]:
     """Metric name -> ["path:line", ...] of every literal emission site."""
-    out: dict[str, list[str]] = {}
-    for root, dirs, files in os.walk(SRC):
-        dirs[:] = [d for d in dirs if d != "__pycache__"]
-        for f in files:
-            if not f.endswith(".py"):
-                continue
-            path = os.path.join(root, f)
-            with open(path, encoding="utf-8") as fh:
-                text = fh.read()
-            rel = os.path.relpath(path, REPO)
-            for m in _EMIT.finditer(text):
-                line = text.count("\n", 0, m.start()) + 1
-                out.setdefault(m.group(1), []).append(f"{rel}:{line}")
-    return out
+    return _surface.emitted_names(REPO)
 
 
 def check_metrics() -> list[str]:
     """Return human-readable error strings (empty = clean)."""
-    if not os.path.exists(DOC):
-        return ["docs/OBSERVABILITY.md is missing"]
-    with open(DOC, encoding="utf-8") as fh:
-        doc = fh.read()
-    names = emitted_names()
-    errors = []
-    for name in sorted(names):
-        if name not in doc:
-            errors.append(
-                f"metric {name!r} (emitted at {names[name][0]}) is not "
-                f"documented in docs/OBSERVABILITY.md")
-    if "kvstat_" not in doc:
-        errors.append("docs/OBSERVABILITY.md no longer describes the "
-                      "kvstat_ forwarding namespace")
-    if not names:
-        errors.append("no metric emissions found under src/ — "
-                      "has the telemetry subsystem moved?")
-    return errors
+    return _surface.check_metrics(REPO)
 
 
 def main() -> int:

@@ -1,0 +1,10 @@
+"""``repro-lint``: AST-based invariant analyzer for this repo.
+
+Run as ``python -m tools.lint`` (see ``tools/lint/runner.py`` for the
+CLI, ``docs/LINTS.md`` for the rule catalogue).
+"""
+from tools.lint.core import (  # noqa: F401
+    Finding, LintContext, LintPass, PASSES, SourceFile, register,
+)
+from tools.lint import passes as _passes  # noqa: F401  (registers passes)
+from tools.lint.runner import main, run_lint  # noqa: F401

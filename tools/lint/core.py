@@ -1,0 +1,204 @@
+"""Core types of ``repro-lint``: findings, source files, pass registry.
+
+The analyzer is **zero-dependency** (stdlib ``ast`` only) so it can run
+in the docs/lint CI jobs without installing the package, and fast enough
+to run on every commit.  Design:
+
+  * a **pass** inspects parsed source and yields :class:`Finding`s; local
+    passes (``cacheable=True``) see one file at a time and their results
+    are cached per file content hash, repo-level passes (jit discipline
+    needs a cross-file call graph, the surface passes walk docs/) run
+    every time;
+  * an inline ``# lint: disable=<rule>[,<rule>...]`` comment on the
+    flagged line suppresses findings of those rules (``all`` wildcard);
+  * a committed JSON **baseline** (``tools/lint/baseline.json``)
+    grandfathers known findings by ``(rule, path, message)`` fingerprint
+    so the gate can be adopted on an imperfect tree without hiding new
+    violations.
+
+Rule catalogue with the invariant each protects: ``docs/LINTS.md``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+
+# bump when a pass's semantics change: invalidates every cache entry
+LINT_VERSION = "1"
+
+_SUPPRESS = re.compile(r"#\s*lint:\s*disable=([A-Za-z0-9_,\- ]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location.
+
+    ``fingerprint()`` deliberately excludes the line number: baselined
+    findings survive unrelated edits that shift lines, and a *new*
+    duplicate of a grandfathered message still surfaces (the baseline is
+    a multiset, consumed one match per occurrence)."""
+    rule: str
+    path: str           # repo-relative, posix separators
+    line: int
+    col: int
+    message: str
+    baselined: bool = False
+
+    def fingerprint(self) -> tuple:
+        return (self.rule, self.path, self.message)
+
+    def format(self) -> str:
+        mark = "  [baselined]" if self.baselined else ""
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}: " \
+               f"{self.message}{mark}"
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message,
+                "baselined": self.baselined}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Finding":
+        return cls(rule=d["rule"], path=d["path"], line=d["line"],
+                   col=d["col"], message=d["message"],
+                   baselined=d.get("baselined", False))
+
+
+class SourceFile:
+    """A parsed source file plus its suppression map."""
+
+    def __init__(self, rel: str, abspath: str, text: str):
+        self.rel = rel
+        self.abspath = abspath
+        self.text = text
+        self.tree = ast.parse(text, filename=abspath)
+        # line number -> set of rule names disabled on that line
+        self.suppressions: dict[int, set[str]] = {}
+        for i, line in enumerate(text.splitlines(), start=1):
+            m = _SUPPRESS.search(line)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",")
+                         if r.strip()}
+                self.suppressions[i] = rules
+
+    def suppressed(self, finding: Finding) -> bool:
+        rules = self.suppressions.get(finding.line)
+        return bool(rules) and (finding.rule in rules or "all" in rules)
+
+
+class LintContext:
+    """Everything a pass may look at: the repo root and the parsed files."""
+
+    def __init__(self, root: str, files: dict[str, SourceFile]):
+        self.root = root
+        self.files = files          # rel path -> SourceFile, sorted
+
+
+class LintPass:
+    """Base class.  Subclasses set ``name`` (pass id), ``rules`` (the
+    rule ids it can emit — used by ``--select``/``--skip`` and the
+    docs), and either override :meth:`check_file` (local pass, cacheable
+    per file) or :meth:`run` (repo-level pass, ``cacheable = False``)."""
+
+    name: str = ""
+    rules: tuple = ()
+    cacheable: bool = True
+
+    def check_file(self, sf: SourceFile, ctx: LintContext) -> list:
+        return []
+
+    def run(self, ctx: LintContext) -> list:
+        out = []
+        for sf in ctx.files.values():
+            out.extend(self.check_file(sf, ctx))
+        return out
+
+
+PASSES: dict[str, LintPass] = {}
+
+
+def register(cls):
+    """Class decorator adding a pass to the global registry."""
+    inst = cls()
+    assert inst.name and inst.name not in PASSES, inst.name
+    PASSES[inst.name] = inst
+    return cls
+
+
+# -- shared AST helpers ------------------------------------------------------
+
+def attr_chain(node) -> str | None:
+    """Dotted-name string of a Name/Attribute chain (``jax.random.split``
+    -> "jax.random.split"), or None for anything more dynamic."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def chain_base(chain: str | None) -> str | None:
+    """Last component of a dotted chain ("jax.jit" -> "jit")."""
+    return chain.rsplit(".", 1)[-1] if chain else None
+
+
+def chain_root(chain: str | None) -> str | None:
+    """First component of a dotted chain ("jax.jit" -> "jax")."""
+    return chain.split(".", 1)[0] if chain else None
+
+
+def build_parents(tree) -> dict:
+    """Child node -> parent node for the whole tree."""
+    parents = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def enclosing_functions(node, parents) -> list:
+    """Innermost-first chain of enclosing Function/AsyncFunction/Lambda
+    nodes.  A decorator expression is *not* inside the function it
+    decorates (it evaluates in the enclosing scope)."""
+    out = []
+    cur, prev = parents.get(node), node
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            in_decorator = (not isinstance(cur, ast.Lambda)
+                            and any(prev is d or _contains(d, prev)
+                                    for d in cur.decorator_list))
+            if not in_decorator:
+                out.append(cur)
+        prev, cur = cur, parents.get(cur)
+    return out
+
+
+def _contains(tree, node) -> bool:
+    return any(n is node for n in ast.walk(tree))
+
+
+def calls_in(node) -> set:
+    """Basenames of every function called anywhere under ``node``."""
+    out = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            base = chain_base(attr_chain(n.func))
+            if base:
+                out.add(base)
+    return out
+
+
+def contains_call_rooted(node, roots: tuple) -> bool:
+    """Whether any Call under ``node`` has a func chain rooted at one of
+    ``roots`` (e.g. ("jax", "jnp"))."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            r = chain_root(attr_chain(n.func))
+            if r in roots:
+                return True
+    return False

@@ -1,0 +1,8 @@
+"""Pass modules.  Importing this package registers every pass."""
+from tools.lint.passes import (  # noqa: F401
+    async_blocking,
+    jit_discipline,
+    prng_discipline,
+    refcount,
+    surface,
+)

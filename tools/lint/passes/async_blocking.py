@@ -1,0 +1,100 @@
+"""async blocking: keep the event loop responsive in the serving frontend.
+
+``async_engine.py`` runs every engine replica's step loop on one asyncio
+event loop; a synchronous stall in any coroutine freezes token streams
+for *all* requests on *all* replicas.  Scope: every ``async def`` in
+``async_engine.py`` / ``router.py`` (and any other serving file).
+
+``async-blocking-call``
+    Inside ``async def``: ``time.sleep`` (use ``asyncio.sleep``), file
+    I/O (``open``/``read_text``/``write_text``/...), or ``asyncio.run``
+    (nested loops deadlock).
+
+``async-sync-step``
+    A non-awaited ``.step()`` / ``.run()`` call inside ``async def``.
+    The engine's ``step()`` is CPU-bound host code, so the frontend is
+    *allowed* to call it synchronously **if** the enclosing loop body
+    also awaits (the ``eng.step(); await asyncio.sleep(0)`` cooperative
+    pattern) — otherwise the coroutine monopolizes the loop for the
+    whole drain.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint.core import (
+    Finding, LintPass, attr_chain, build_parents, chain_base, register,
+)
+
+_SCOPE_FILES = {"async_engine.py", "router.py"}
+_BLOCK_CHAINS = {"time.sleep", "asyncio.run"}
+_IO_BASES = {"open", "read_text", "write_text", "read_bytes",
+             "write_bytes"}
+
+
+def _in_scope(rel: str) -> bool:
+    parts = rel.replace("\\", "/").split("/")
+    return parts[-1] in _SCOPE_FILES or "serving" in parts
+
+
+def _awaited(call, parents) -> bool:
+    p = parents.get(call)
+    return isinstance(p, ast.Await)
+
+
+def _enclosing_loop(node, stop, parents):
+    cur = parents.get(node)
+    while cur is not None and cur is not stop:
+        if isinstance(cur, (ast.For, ast.While, ast.AsyncFor)):
+            return cur
+        cur = parents.get(cur)
+    return None
+
+
+def _has_await(node) -> bool:
+    return any(isinstance(n, ast.Await) for n in ast.walk(node))
+
+
+@register
+class AsyncBlockingPass(LintPass):
+    name = "async-blocking"
+    rules = ("async-blocking-call", "async-sync-step")
+
+    def check_file(self, sf, ctx):
+        if not _in_scope(sf.rel):
+            return []
+        parents = build_parents(sf.tree)
+        out = []
+        for fn in ast.walk(sf.tree):
+            if not isinstance(fn, ast.AsyncFunctionDef):
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                chain = attr_chain(node.func)
+                base = chain_base(chain)
+                if chain in _BLOCK_CHAINS or (
+                        isinstance(node.func, ast.Name)
+                        and base in _IO_BASES) or (
+                        isinstance(node.func, ast.Attribute)
+                        and base in _IO_BASES and base != "open"):
+                    out.append(Finding(
+                        rule="async-blocking-call", path=sf.rel,
+                        line=node.lineno, col=node.col_offset,
+                        message=f"`{chain or base}` blocks the event"
+                                f" loop inside async `{fn.name}`; every"
+                                f" stream on this loop stalls"))
+                elif (isinstance(node.func, ast.Attribute)
+                        and base in {"step", "run"}
+                        and not _awaited(node, parents)):
+                    loop = _enclosing_loop(node, fn, parents)
+                    if loop is not None and _has_await(loop):
+                        continue    # cooperative: loop body also awaits
+                    out.append(Finding(
+                        rule="async-sync-step", path=sf.rel,
+                        line=node.lineno, col=node.col_offset,
+                        message=f"sync `.{base}()` in async `{fn.name}`"
+                                f" without a cooperative await in the"
+                                f" same loop; pair it with `await"
+                                f" asyncio.sleep(0)` or await it"))
+        return out

@@ -1,0 +1,381 @@
+"""jit discipline: stable compile counts and no host syncs in traced code.
+
+Three rules, all driven by one repo-wide sweep (the pass needs a
+cross-file call graph, so it is not per-file cacheable):
+
+``jit-cache-discipline``
+    ``jax.jit`` / ``pjit`` / ``shard_map`` call sites must be module
+    level, or live inside a function that stores the result into a
+    module-level cache dict (the ``_STEP_CACHE`` pattern in
+    ``serving/engine.py``), or be part of an AOT ``.lower(...)`` chain,
+    or sit inside a function that is itself jit-traced (``shard_map``
+    inside a jitted model function re-traces with its parent and adds
+    no extra compile).  Anything else creates a fresh compiled program
+    per call and silently breaks the compile-count gates.
+
+``jit-host-sync``
+    Inside a jit-traced body (transitive call-graph closure from every
+    jit root), flag ``.item()``, ``float()``/``int()``/``bool()`` over a
+    jax/jnp-derived value, and ``np.*`` calls fed a jax/jnp-derived
+    value.  These force a device sync mid-trace (or fail under jit).
+    Static shape/config math (``np.prod(mesh.shape...)``) is not
+    jax-derived and is not flagged.
+
+``eager-loop-sync``
+    In host-side serving code (``src/repro/serving/``), a
+    ``float()``/``int()``/``np.asarray()`` wrapped around a fresh
+    jax/jnp call *inside a loop body* dispatches one device program and
+    one blocking transfer per iteration — the spec-decode verify bug
+    this PR fixes.  Hoist to one batched draw before the loop.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint.core import (
+    Finding, LintPass, attr_chain, build_parents, calls_in, chain_base,
+    chain_root, enclosing_functions, register,
+)
+
+_JIT_BASES = {"jit", "pjit", "shard_map"}
+_JAX_ROOTS = ("jax", "jnp")
+_NP_ROOTS = ("np", "numpy", "onp")
+_COERCE = {"float", "int", "bool"}
+
+
+def _is_jit_maker(call: ast.Call) -> str | None:
+    """Return the jit-maker kind ("jit"/"pjit"/"shard_map") if ``call``
+    constructs a compiled program, else None."""
+    chain = attr_chain(call.func)
+    base = chain_base(chain)
+    if base not in _JIT_BASES:
+        return None
+    root = chain_root(chain)
+    if base == "jit" and root not in ("jax",):
+        return None            # someone's unrelated .jit attribute
+    return base
+
+
+def _jit_decorator_target(dec) -> bool:
+    """True if ``dec`` is ``@jax.jit``/``@pjit``/``@shard_map`` or a
+    ``@partial(jax.jit, ...)`` wrapping of one."""
+    if isinstance(dec, ast.Call):
+        base = chain_base(attr_chain(dec.func))
+        if base in _JIT_BASES:
+            return True
+        if base == "partial" and dec.args:
+            return chain_base(attr_chain(dec.args[0])) in _JIT_BASES
+        return False
+    return chain_base(attr_chain(dec)) in _JIT_BASES
+
+
+def _module_cache_dicts(tree) -> set:
+    """Names of module-level dict-valued assignments (jit cache stores)."""
+    out = set()
+    for node in tree.body:
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        else:
+            continue
+        is_dict = isinstance(value, ast.Dict) or (
+            isinstance(value, ast.Call)
+            and chain_base(attr_chain(value.func)) == "dict")
+        if is_dict:
+            out.update(t.id for t in targets if isinstance(t, ast.Name))
+    return out
+
+
+def _stores_into(fn, cache_names: set) -> bool:
+    """Whether ``fn``'s body assigns into one of ``cache_names`` via a
+    subscript (``_CACHE[key] = ...``) or ``.setdefault`` call."""
+    for n in ast.walk(fn):
+        if isinstance(n, (ast.Assign, ast.AugAssign)):
+            targets = n.targets if isinstance(n, ast.Assign) else [n.target]
+            for t in targets:
+                if (isinstance(t, ast.Subscript)
+                        and chain_base(attr_chain(t.value)) in cache_names):
+                    return True
+        if (isinstance(n, ast.Call)
+                and isinstance(n.func, ast.Attribute)
+                and n.func.attr == "setdefault"
+                and chain_base(attr_chain(n.func.value)) in cache_names):
+            return True
+    return False
+
+
+class _FileFacts:
+    """Per-file extraction feeding the repo-wide call graph."""
+
+    def __init__(self, sf):
+        self.sf = sf
+        self.parents = build_parents(sf.tree)
+        self.cache_names = _module_cache_dicts(sf.tree)
+        # basename -> function node(s) defined in this file
+        self.defs: dict[str, list] = {}
+        # jit roots: names whose bodies end up traced
+        self.root_names: set = set()
+        # lambda nodes passed directly to a jit maker (bodies are traced)
+        self.root_lambdas: list = []
+        # (call node, kind) for every jit-maker call site
+        self.sites: list = []
+        # id() of inner defs returned by their enclosing factory
+        self.factory_products: set = set()
+        self._collect()
+
+    def _collect(self):
+        for node in ast.walk(self.sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs.setdefault(node.name, []).append(node)
+                if any(_jit_decorator_target(d)
+                       for d in node.decorator_list):
+                    self.root_names.add(node.name)
+                self._mark_factory_products(node)
+            elif isinstance(node, ast.Call):
+                kind = _is_jit_maker(node)
+                if kind is None:
+                    continue
+                self.sites.append((node, kind))
+                # jax.jit(f) / shard_map(f, ...): f's body is traced
+                if node.args:
+                    fn = node.args[0]
+                    base = chain_base(attr_chain(fn))
+                    if base:
+                        self.root_names.add(base)
+                    elif isinstance(fn, ast.Lambda):
+                        self.root_lambdas.append(fn)
+
+    def _mark_factory_products(self, g):
+        """Inner defs that ``g`` returns (the ``make_*``/builder idiom):
+        the closure is built once per factory call, and callers own the
+        jit/cache discipline for the product."""
+        inner = {n.name: n for n in ast.walk(g)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                 and n is not g}
+        if not inner:
+            return
+        for ret in ast.walk(g):
+            if isinstance(ret, ast.Return) and ret.value is not None:
+                for n in ast.walk(ret.value):
+                    if isinstance(n, ast.Name) and n.id in inner:
+                        self.factory_products.add(id(inner[n.id]))
+
+
+def _reachable(facts: list) -> set:
+    """Transitive closure of traced function bodies from every jit root,
+    as a set of ``(file, name)`` pairs.
+
+    Name resolution is deliberately conservative: a called basename
+    binds to a def in the *same file* first, and crosses files only
+    when exactly one file in the sweep defines it.  Basename-global
+    matching is wrong here — generic inner names (``step``, ``body``,
+    ``fn``) appear both in traced scan bodies and in host-side engine
+    methods, and one shared name would cascade the whole host layer
+    into the traced set."""
+    by_file = {ff.sf.rel: ff for ff in facts}
+    file_count: dict[str, set] = {}
+    for ff in facts:
+        for name in ff.defs:
+            file_count.setdefault(name, set()).add(ff.sf.rel)
+
+    def resolve(rel: str, base: str):
+        if base in by_file[rel].defs:
+            return (rel, base)
+        owners = file_count.get(base)
+        if owners and len(owners) == 1:
+            return (next(iter(owners)), base)
+        return None
+
+    frontier = set()
+    for ff in facts:
+        for name in ff.root_names:
+            node = resolve(ff.sf.rel, name)
+            if node:
+                frontier.add(node)
+        for lam in ff.root_lambdas:
+            for base in calls_in(lam):
+                node = resolve(ff.sf.rel, base)
+                if node:
+                    frontier.add(node)
+    seen = set()
+    while frontier:
+        rel, name = frontier.pop()
+        if (rel, name) in seen:
+            continue
+        seen.add((rel, name))
+        callees = set()
+        for fn in by_file[rel].defs[name]:
+            callees |= calls_in(fn)
+        for base in callees:
+            node = resolve(rel, base)
+            if node and node not in seen:
+                frontier.add(node)
+    return seen
+
+
+def _returned_uncalled(call, parents) -> bool:
+    """True when the jit-maker ``call``'s *result* is returned as-is
+    (``return jax.jit(step)`` — the factory idiom; the caller owns the
+    cache discipline for the product).  ``return jax.jit(f)(x)`` does
+    not qualify: the fresh program is invoked, not handed out."""
+    cur, prev = parents.get(call), call
+    while cur is not None:
+        if isinstance(cur, ast.Return):
+            return True
+        if isinstance(cur, ast.Call) and cur.func is prev:
+            return False
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            return False
+        prev, cur = cur, parents.get(cur)
+    return False
+
+
+def _jax_locals(fn) -> set:
+    """Local names assigned from a jax/jnp-rooted expression in ``fn``."""
+    out = set()
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Assign) and _jax_derived(n.value, out):
+            out.update(t.id for t in n.targets if isinstance(t, ast.Name))
+    return out
+
+
+def _jax_derived(expr, jax_names: set) -> bool:
+    """Whether ``expr`` contains a jax/jnp-rooted call or a name known to
+    hold a jax value."""
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Call):
+            if chain_root(attr_chain(n.func)) in _JAX_ROOTS:
+                return True
+        elif isinstance(n, ast.Name) and n.id in jax_names:
+            return True
+    return False
+
+
+@register
+class JitDisciplinePass(LintPass):
+    name = "jit-discipline"
+    rules = ("jit-cache-discipline", "jit-host-sync", "eager-loop-sync")
+    cacheable = False           # needs the cross-file call graph
+
+    def run(self, ctx):
+        facts = [_FileFacts(sf) for sf in ctx.files.values()]
+        traced = _reachable(facts)
+        out = []
+        for ff in facts:
+            out.extend(self._check_sites(ff, traced))
+            out.extend(self._check_host_sync(ff, traced))
+            out.extend(self._check_eager_loops(ff, traced))
+        return out
+
+    # -- jit-cache-discipline ------------------------------------------
+
+    def _check_sites(self, ff, traced):
+        out = []
+        for call, kind in ff.sites:
+            parent = ff.parents.get(call)
+            if isinstance(parent, ast.Attribute) and parent.attr == "lower":
+                continue        # AOT: jax.jit(f).lower(...) compiles once
+            enclosing = enclosing_functions(call, ff.parents)
+            if not enclosing:
+                continue        # module level: shared by construction
+            named = [f for f in enclosing
+                     if isinstance(f, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef))]
+            if any(_stores_into(f, ff.cache_names) for f in named):
+                continue        # the _STEP_CACHE pattern
+            if any((ff.sf.rel, f.name) in traced for f in named):
+                continue        # already inside a traced body
+            if any(id(f) in ff.factory_products for f in named):
+                continue        # make_*-style builder: caller caches
+            if _returned_uncalled(call, ff.parents):
+                continue        # factory hands the program out uncalled
+            fname = named[0].name if named else "<lambda>"
+            out.append(Finding(
+                rule="jit-cache-discipline", path=ff.sf.rel,
+                line=call.lineno, col=call.col_offset,
+                message=f"{kind} call inside `{fname}` is neither module"
+                        f"-level nor stored in a module-level cache dict;"
+                        f" each call compiles a fresh program"))
+        return out
+
+    # -- jit-host-sync -------------------------------------------------
+
+    def _check_host_sync(self, ff, traced):
+        out = []
+        bodies = []
+        for name in ff.defs:
+            if (ff.sf.rel, name) in traced:
+                bodies.extend(ff.defs[name])
+        bodies.extend(ff.root_lambdas)
+        seen_nodes = set()
+        for fn in bodies:
+            # only names provably bound to jax values count as traced:
+            # coercions of plain args/config attrs (static shape math
+            # like ``np.sqrt(cfg.d_model)``) must not be flagged
+            jax_names = _jax_locals(fn)
+            for n in ast.walk(fn):
+                if not isinstance(n, ast.Call) or id(n) in seen_nodes:
+                    continue
+                seen_nodes.add(id(n))
+                msg = self._host_sync_msg(n, jax_names)
+                if msg:
+                    fname = getattr(fn, "name", "<lambda>")
+                    out.append(Finding(
+                        rule="jit-host-sync", path=ff.sf.rel,
+                        line=n.lineno, col=n.col_offset,
+                        message=f"{msg} inside jit-traced `{fname}` forces"
+                                f" a host sync (or fails under jit)"))
+        return out
+
+    @staticmethod
+    def _host_sync_msg(call, jax_names):
+        func = call.func
+        if isinstance(func, ast.Attribute) and func.attr == "item":
+            return "`.item()`"
+        chain = attr_chain(func)
+        base = chain_base(chain)
+        if (isinstance(func, ast.Name) and base in _COERCE and call.args
+                and _jax_derived(call.args[0], jax_names)):
+            return f"`{base}()` over a traced value"
+        if (chain_root(chain) in _NP_ROOTS
+                and any(_jax_derived(a, jax_names) for a in call.args)):
+            return f"`{chain}()` over a traced value"
+        return None
+
+    # -- eager-loop-sync -----------------------------------------------
+
+    def _check_eager_loops(self, ff, traced):
+        if "/serving/" not in "/" + ff.sf.rel:
+            return []
+        out = []
+        host_fns = [fn for name, fns in ff.defs.items()
+                    if (ff.sf.rel, name) not in traced for fn in fns]
+        flagged = set()     # nested loops: report each call site once
+        for fn in host_fns:
+            for loop in ast.walk(fn):
+                if not isinstance(loop, (ast.For, ast.While)):
+                    continue
+                for n in ast.walk(loop):
+                    if not isinstance(n, ast.Call) or id(n) in flagged:
+                        continue
+                    base = chain_base(attr_chain(n.func))
+                    if base not in (_COERCE | {"asarray", "array"}):
+                        continue
+                    if not n.args:
+                        continue
+                    # flag only a *fresh* device computation per
+                    # iteration: the arg itself contains a jax/jnp call
+                    if _jax_derived(n.args[0], set()):
+                        flagged.add(id(n))
+                        out.append(Finding(
+                            rule="eager-loop-sync", path=ff.sf.rel,
+                            line=n.lineno, col=n.col_offset,
+                            message=f"`{base}(...)` over a fresh jax"
+                                    f" computation inside a loop in"
+                                    f" `{fn.name}`: one device dispatch +"
+                                    f" blocking transfer per iteration —"
+                                    f" hoist to a batched draw"))
+        return out

@@ -1,0 +1,87 @@
+"""prng discipline: schedule-invariant sampling under ``serving/``.
+
+The serving layer's bit-identity guarantee (PRs 3/6/9: same tokens
+regardless of batch composition, chunk schedule, or speculation window)
+holds because every random draw is keyed **only** by
+``(rng_seed, request_id, position)`` through the registered helpers —
+``sampler.request_key`` / ``sampler.root_key`` and the spec-decode
+``accept_key`` / ``residual_key`` wrappers.  A raw ``PRNGKey`` /
+``split`` / ``fold_in`` anywhere else introduces key state that depends
+on *when* the draw happens, which is exactly what breaks schedule
+invariance.
+
+``prng-raw-key``
+    Direct ``jax.random.PRNGKey`` / ``split`` / ``fold_in`` under
+    ``serving/`` outside the registered helper definitions.
+
+``prng-unkeyed-draw``
+    A ``jax.random.<draw>(...)`` whose key argument is built by a call
+    that is not one of the registered helpers (a key passed in as a
+    plain variable is trusted — its construction site is checked by
+    ``prng-raw-key``).
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint.core import (
+    Finding, LintPass, attr_chain, build_parents, chain_base,
+    enclosing_functions, register,
+)
+
+# the registered key-derivation helpers and the only files allowed to
+# define them with raw jax.random primitives
+KEY_HELPERS = {"request_key", "root_key", "accept_key", "residual_key"}
+HELPER_FILES = {"sampler.py", "spec.py"}
+
+_RAW = {"jax.random.PRNGKey", "jax.random.split", "jax.random.fold_in"}
+_DRAWS = {"uniform", "normal", "categorical", "bernoulli", "gumbel",
+          "randint", "truncated_normal", "exponential", "choice",
+          "permutation"}
+
+
+def _in_scope(rel: str) -> bool:
+    return "serving" in rel.replace("\\", "/").split("/")
+
+
+@register
+class PrngDisciplinePass(LintPass):
+    name = "prng-discipline"
+    rules = ("prng-raw-key", "prng-unkeyed-draw")
+
+    def check_file(self, sf, ctx):
+        if not _in_scope(sf.rel):
+            return []
+        parents = build_parents(sf.tree)
+        basename = sf.rel.rsplit("/", 1)[-1]
+        is_helper_file = basename in HELPER_FILES
+        out = []
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = attr_chain(node.func)
+            if chain in _RAW:
+                fns = enclosing_functions(node, parents)
+                names = {getattr(f, "name", None) for f in fns}
+                if is_helper_file and names & KEY_HELPERS:
+                    continue    # the registered derivation sites
+                out.append(Finding(
+                    rule="prng-raw-key", path=sf.rel,
+                    line=node.lineno, col=node.col_offset,
+                    message=f"direct `{chain}` in serving code; derive"
+                            f" keys via sampler.request_key/root_key (or"
+                            f" spec accept_key/residual_key) so sampling"
+                            f" stays schedule-invariant"))
+            elif (chain and chain.startswith("jax.random.")
+                    and chain_base(chain) in _DRAWS and node.args):
+                key = node.args[0]
+                if isinstance(key, ast.Call):
+                    kbase = chain_base(attr_chain(key.func))
+                    if kbase not in KEY_HELPERS:
+                        out.append(Finding(
+                            rule="prng-unkeyed-draw", path=sf.rel,
+                            line=node.lineno, col=node.col_offset,
+                            message=f"`{chain}` draw keyed by"
+                                    f" `{kbase}(...)`, not a registered"
+                                    f" request_key/accept_key helper"))
+        return out

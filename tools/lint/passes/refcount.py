@@ -1,0 +1,104 @@
+"""refcount pairing: exception safety of the paged-KV page allocator.
+
+``kvcache/paged.py`` maintains the invariant *page refcount == number of
+logical holders* (sequences + prefix-tree nodes).  Any path that has
+already called ``_alloc_raw`` / ``_incref`` and then raises without an
+intervening ``_decref`` (or rollback/release helper, or an enclosing
+``try`` whose handler/finally decrefs) leaks pages: the free list
+shrinks forever and the pool eventually reports OutOfPages under
+capacity it actually has.  The ``admit_shared`` undo loop is the model
+compliant shape.
+
+``refcount-leak-on-raise``
+    A ``raise`` statement textually after the function's first
+    ``_alloc_raw``/``_incref`` with no ``_decref``/rollback between the
+    two and no enclosing handler that releases.
+
+This is a line-order heuristic (no path-sensitive dataflow): a raise
+*above* the first alloc is trivially safe, one below must show a
+release between alloc and raise or an enclosing cleanup.  Misses are
+possible; false positives get an inline suppression with a comment
+explaining why the path cannot leak.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint.core import (
+    Finding, LintPass, attr_chain, build_parents, chain_base,
+    enclosing_functions, register,
+)
+
+_ACQUIRE = {"_alloc_raw", "_incref"}
+_RELEASE = {"_decref", "rollback", "release", "free_pages"}
+
+
+def _in_scope(rel: str) -> bool:
+    parts = rel.replace("\\", "/").split("/")
+    return parts[-1] == "paged.py" or "kvcache" in parts
+
+
+def _call_lines(fn, names: set) -> list:
+    out = []
+    for n in ast.walk(fn):
+        if (isinstance(n, ast.Call)
+                and chain_base(attr_chain(n.func)) in names):
+            out.append(n.lineno)
+    return sorted(out)
+
+
+def _cleanup_in_enclosing_try(raise_node, parents) -> bool:
+    """Whether an enclosing ``try`` releases in a handler or finally."""
+    cur = parents.get(raise_node)
+    while cur is not None and not isinstance(
+            cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        if isinstance(cur, ast.Try):
+            cleanup = list(cur.finalbody)
+            for h in cur.handlers:
+                cleanup.extend(h.body)
+            for stmt in cleanup:
+                if _call_lines(stmt, _RELEASE):
+                    return True
+        cur = parents.get(cur)
+    return False
+
+
+@register
+class RefcountPairingPass(LintPass):
+    name = "refcount-pairing"
+    rules = ("refcount-leak-on-raise",)
+
+    def check_file(self, sf, ctx):
+        if not _in_scope(sf.rel):
+            return []
+        parents = build_parents(sf.tree)
+        out = []
+        for fn in ast.walk(sf.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            acquire = _call_lines(fn, _ACQUIRE)
+            if not acquire:
+                continue
+            first_acquire = acquire[0]
+            releases = _call_lines(fn, _RELEASE)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Raise):
+                    continue
+                if node.lineno <= first_acquire:
+                    continue    # raised before anything was acquired
+                if any(first_acquire < r <= node.lineno
+                       for r in releases):
+                    continue    # an undo/rollback sits on the path
+                if _cleanup_in_enclosing_try(node, parents):
+                    continue
+                fname = next((f.name for f in enclosing_functions(
+                    node, parents) if not isinstance(f, ast.Lambda)),
+                    fn.name)
+                out.append(Finding(
+                    rule="refcount-leak-on-raise", path=sf.rel,
+                    line=node.lineno, col=node.col_offset,
+                    message=f"raise in `{fname}` after"
+                            f" _alloc_raw/_incref (line {first_acquire})"
+                            f" with no _decref/rollback on the path:"
+                            f" pages leak on this exception"))
+        return out

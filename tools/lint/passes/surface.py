@@ -1,0 +1,201 @@
+"""surface lint: docs links, spec doctests, API surface, metric names.
+
+The logic that used to live in ``tools/check_docs.py`` and
+``tools/check_metrics.py``, re-homed as registry passes so one runner
+(``python -m tools.lint``) covers every repo invariant.  The old
+scripts remain as thin wrappers calling these functions, because CI's
+``docs`` job and tests/test_{docs,telemetry}.py invoke them by path.
+
+``surface-docs``
+    Intra-repo Markdown links resolve; ``docs/FORMATS.md`` doctests
+    pass; every ``repro.serving.__all__`` name appears in
+    ``docs/API.md``.
+
+``surface-metrics``
+    Every literal metric name emitted via ``.counter/.gauge/.histogram``
+    under ``src/`` is documented in ``docs/OBSERVABILITY.md``, and the
+    doc still describes the dynamic ``kvstat_`` namespace.
+
+Both passes run only when the repo root has a ``docs/`` directory, so
+fixture trees in tests are exempt, and are never cached (they depend on
+the Markdown files, not on any one Python file).
+"""
+from __future__ import annotations
+
+import ast
+import doctest
+import os
+import re
+import sys
+
+from tools.lint.core import Finding, LintPass, register
+
+SKIP_DIRS = {".git", ".github", "__pycache__", ".pytest_cache",
+             "node_modules"}
+# [text](target) — target captured up to the first unescaped ')'
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+# .counter("name" / .gauge("name" / .histogram("name" — emission sites
+# only (reads go through .get("...")/.value("...")); \s* spans newlines
+_EMIT = re.compile(
+    r"\.(?:counter|gauge|histogram)\(\s*['\"]([A-Za-z0-9_.]+)['\"]")
+
+
+# -- docs checks (ex tools/check_docs.py) -----------------------------------
+
+def md_files(repo: str) -> list[str]:
+    out = []
+    for root, dirs, files in os.walk(repo):
+        dirs[:] = [d for d in dirs if d not in SKIP_DIRS]
+        out.extend(os.path.join(root, f) for f in files
+                   if f.endswith(".md"))
+    return sorted(out)
+
+
+def check_links(repo: str) -> list[str]:
+    """Return human-readable error strings for dangling intra-repo links."""
+    errors = []
+    for path in md_files(repo):
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        # fenced code blocks may contain ``[x](y)``-looking noise
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), target))
+            if not os.path.exists(resolved):
+                rel = os.path.relpath(path, repo)
+                errors.append(f"{rel}: dangling link -> {m.group(1)}")
+    return errors
+
+
+def run_doctests(repo: str) -> list[str]:
+    """Doctest docs/FORMATS.md; returns error strings (empty = pass)."""
+    src = os.path.join(repo, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    spec = os.path.join(repo, "docs", "FORMATS.md")
+    if not os.path.exists(spec):
+        return ["docs/FORMATS.md is missing"]
+    res = doctest.testfile(spec, module_relative=False, verbose=False)
+    if res.failed:
+        return [f"docs/FORMATS.md: {res.failed}/{res.attempted} "
+                f"doctests failed"]
+    if not res.attempted:
+        return ["docs/FORMATS.md: no doctests found (worked example gone?)"]
+    return []
+
+
+def check_api_surface(repo: str) -> list[str]:
+    """Every ``repro.serving.__all__`` name must appear in docs/API.md."""
+    init = os.path.join(repo, "src", "repro", "serving", "__init__.py")
+    api = os.path.join(repo, "docs", "API.md")
+    if not os.path.exists(api):
+        return ["docs/API.md is missing"]
+    with open(init, encoding="utf-8") as fh:
+        tree = ast.parse(fh.read(), init)
+    names: list[str] = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign)
+                and any(isinstance(t, ast.Name) and t.id == "__all__"
+                        for t in node.targets)):
+            names = [ast.literal_eval(elt) for elt in node.value.elts]
+    if not names:
+        return ["repro/serving/__init__.py: no __all__ found"]
+    with open(api, encoding="utf-8") as fh:
+        doc = fh.read()
+    return [f"docs/API.md: public name {n!r} from repro.serving.__all__ "
+            f"is undocumented" for n in names if n not in doc]
+
+
+# -- metric checks (ex tools/check_metrics.py) ------------------------------
+
+def emitted_names(repo: str) -> dict[str, list[str]]:
+    """Metric name -> ["path:line", ...] of every literal emission site."""
+    out: dict[str, list[str]] = {}
+    src = os.path.join(repo, "src")
+    for root, dirs, files in os.walk(src):
+        dirs[:] = [d for d in dirs if d != "__pycache__"]
+        for f in files:
+            if not f.endswith(".py"):
+                continue
+            path = os.path.join(root, f)
+            with open(path, encoding="utf-8") as fh:
+                text = fh.read()
+            rel = os.path.relpath(path, repo)
+            for m in _EMIT.finditer(text):
+                line = text.count("\n", 0, m.start()) + 1
+                out.setdefault(m.group(1), []).append(f"{rel}:{line}")
+    return out
+
+
+def check_metrics(repo: str) -> list[str]:
+    """Return human-readable error strings (empty = clean)."""
+    doc_path = os.path.join(repo, "docs", "OBSERVABILITY.md")
+    if not os.path.exists(doc_path):
+        return ["docs/OBSERVABILITY.md is missing"]
+    with open(doc_path, encoding="utf-8") as fh:
+        doc = fh.read()
+    names = emitted_names(repo)
+    errors = []
+    for name in sorted(names):
+        if name not in doc:
+            errors.append(
+                f"metric {name!r} (emitted at {names[name][0]}) is not "
+                f"documented in docs/OBSERVABILITY.md")
+    if "kvstat_" not in doc:
+        errors.append("docs/OBSERVABILITY.md no longer describes the "
+                      "kvstat_ forwarding namespace")
+    if not names:
+        errors.append("no metric emissions found under src/ — "
+                      "has the telemetry subsystem moved?")
+    return errors
+
+
+# -- registry wrappers -------------------------------------------------------
+
+def _as_findings(rule: str, errors: list[str], default_path: str) -> list:
+    out = []
+    for e in errors:
+        # checker strings lead with "path: ..." when file-specific
+        path, msg = default_path, e
+        head = e.split(":", 1)[0]
+        if "/" in head or head.endswith(".md") or head.endswith(".py"):
+            path, msg = head, e.split(":", 1)[1].strip()
+        out.append(Finding(rule=rule, path=path, line=0, col=0,
+                           message=msg))
+    return out
+
+
+@register
+class SurfaceDocsPass(LintPass):
+    name = "surface-docs"
+    rules = ("surface-docs",)
+    cacheable = False
+
+    def run(self, ctx):
+        if not os.path.isdir(os.path.join(ctx.root, "docs")):
+            return []
+        errors = (check_links(ctx.root) + run_doctests(ctx.root)
+                  + check_api_surface(ctx.root))
+        return _as_findings("surface-docs", errors, "docs")
+
+
+@register
+class SurfaceMetricsPass(LintPass):
+    name = "surface-metrics"
+    rules = ("surface-metrics",)
+    cacheable = False
+
+    def run(self, ctx):
+        if not os.path.isdir(os.path.join(ctx.root, "docs")):
+            return []
+        errors = check_metrics(ctx.root)
+        return _as_findings("surface-metrics", errors,
+                            "docs/OBSERVABILITY.md")

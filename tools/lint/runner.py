@@ -1,0 +1,278 @@
+"""Runner + CLI for ``repro-lint`` (``python -m tools.lint``).
+
+Walks ``src/ benchmarks/ examples/ tools/`` under the repo root, parses
+every ``*.py`` once, and drives the registered passes.  Cacheable
+(per-file) pass results are memoized in ``<root>/.lint_cache.json``
+keyed by file content hash and a tool-source hash, so a warm run only
+re-analyzes edited files.  Findings then flow through inline
+suppressions and the committed baseline; only *new* findings fail the
+run (exit 1).
+
+    python -m tools.lint                 # human-readable report
+    python -m tools.lint --check         # CI gate (same exit semantics)
+    python -m tools.lint --json-out f.json
+    python -m tools.lint --select prng-raw-key,refcount-pairing
+    python -m tools.lint --write-baseline   # grandfather current findings
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+from tools.lint.core import (
+    Finding, LINT_VERSION, LintContext, PASSES, SourceFile,
+)
+
+DEFAULT_DIRS = ("src", "benchmarks", "examples", "tools")
+SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", ".hypothesis"}
+
+
+def repo_root() -> str:
+    return os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+
+
+def _tool_key() -> str:
+    """Hash of the analyzer's own sources: editing any pass invalidates
+    every cache entry."""
+    h = hashlib.sha256(LINT_VERSION.encode())
+    tool_dir = os.path.dirname(os.path.abspath(__file__))
+    for root, dirs, files in os.walk(tool_dir):
+        dirs[:] = sorted(d for d in dirs if d not in SKIP_DIRS)
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def iter_py_files(root: str, dirs=DEFAULT_DIRS) -> list[str]:
+    out = []
+    for d in dirs:
+        top = os.path.join(root, d)
+        if not os.path.isdir(top):
+            continue
+        for cur, subdirs, files in os.walk(top):
+            subdirs[:] = sorted(s for s in subdirs if s not in SKIP_DIRS)
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    out.append(os.path.join(cur, f))
+    return sorted(out)
+
+
+def load_files(root: str, paths: list[str]):
+    """Parse sources; returns ({rel: SourceFile}, [parse-error Finding])."""
+    files, errors = {}, []
+    for path in paths:
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        try:
+            files[rel] = SourceFile(rel, path, text)
+        except SyntaxError as e:
+            errors.append(Finding(
+                rule="parse-error", path=rel, line=e.lineno or 0,
+                col=e.offset or 0, message=f"file does not parse: {e.msg}"))
+    return files, errors
+
+
+class _Cache:
+    def __init__(self, path: str, enabled: bool):
+        self.path = path
+        self.enabled = enabled
+        self.key = _tool_key()
+        self.data: dict = {"version": self.key, "files": {}}
+        self.dirty = False
+        if enabled and os.path.exists(path):
+            try:
+                with open(path, encoding="utf-8") as fh:
+                    loaded = json.load(fh)
+                if loaded.get("version") == self.key:
+                    self.data = loaded
+            except (ValueError, OSError):
+                pass
+
+    def lookup(self, rel: str, sha: str, pass_name: str):
+        ent = self.data["files"].get(rel)
+        if not ent or ent.get("sha") != sha:
+            return None
+        hit = ent.get("passes", {}).get(pass_name)
+        return None if hit is None else [Finding.from_json(d) for d in hit]
+
+    def store(self, rel: str, sha: str, pass_name: str, findings):
+        ent = self.data["files"].setdefault(rel, {"sha": sha, "passes": {}})
+        if ent.get("sha") != sha:
+            ent.update({"sha": sha, "passes": {}})
+        ent["passes"][pass_name] = [f.to_json() for f in findings]
+        self.dirty = True
+
+    def flush(self):
+        if self.enabled and self.dirty:
+            tmp = self.path + ".tmp"
+            with open(tmp, "w", encoding="utf-8") as fh:
+                json.dump(self.data, fh)
+            os.replace(tmp, self.path)
+
+
+def load_baseline(path: str) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+    return data.get("findings", data if isinstance(data, list) else [])
+
+
+def apply_baseline(findings, baseline: list[dict]):
+    """Consume baseline entries (a multiset over (rule, path, message))
+    and mark matching findings; returns (findings, unused_entries)."""
+    pool: dict[tuple, int] = {}
+    for ent in baseline:
+        fp = (ent["rule"], ent["path"], ent["message"])
+        pool[fp] = pool.get(fp, 0) + 1
+    out = []
+    import dataclasses
+    for f in findings:
+        fp = f.fingerprint()
+        if pool.get(fp, 0) > 0:
+            pool[fp] -= 1
+            f = dataclasses.replace(f, baselined=True)
+        out.append(f)
+    unused = sum(pool.values())
+    return out, unused
+
+
+def run_lint(root: str, *, select=None, skip=None, use_cache=True,
+             baseline_path=None):
+    """Run every (selected) pass; returns a result dict."""
+    root = os.path.abspath(root)
+    paths = iter_py_files(root)
+    files, findings = load_files(root, paths)
+    ctx = LintContext(root, files)
+    cache = _Cache(os.path.join(root, ".lint_cache.json"), use_cache)
+
+    def wanted(p):
+        names = {p.name, *p.rules}
+        if select and not (names & set(select)):
+            return False
+        if skip and (names & set(skip)):
+            return False
+        return True
+
+    for lint_pass in PASSES.values():
+        if not wanted(lint_pass):
+            continue
+        if lint_pass.cacheable:
+            for rel, sf in files.items():
+                sha = hashlib.sha256(sf.text.encode()).hexdigest()[:16]
+                hit = cache.lookup(rel, sha, lint_pass.name)
+                if hit is None:
+                    hit = list(lint_pass.check_file(sf, ctx))
+                    cache.store(rel, sha, lint_pass.name, hit)
+                findings.extend(hit)
+        else:
+            findings.extend(lint_pass.run(ctx))
+    cache.flush()
+
+    kept, suppressed = [], 0
+    for f in findings:
+        sf = files.get(f.path)
+        if sf is not None and sf.suppressed(f):
+            suppressed += 1
+        else:
+            kept.append(f)
+
+    if baseline_path is None:
+        baseline_path = os.path.join(root, "tools", "lint",
+                                     "baseline.json")
+    kept, unused_baseline = apply_baseline(
+        kept, load_baseline(baseline_path))
+    kept.sort(key=lambda f: (f.path, f.line, f.rule))
+    new = [f for f in kept if not f.baselined]
+    return {
+        "findings": kept, "new": new, "suppressed": suppressed,
+        "unused_baseline": unused_baseline, "files": len(files),
+        "baseline_path": baseline_path,
+    }
+
+
+def write_baseline(result, path: str):
+    entries = [{"rule": f.rule, "path": f.path, "message": f.message}
+               for f in result["findings"]]
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"findings": entries}, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="repro-lint: AST invariant analyzer (docs/LINTS.md)")
+    ap.add_argument("--root", default=repo_root(),
+                    help="repo root to analyze (default: this repo)")
+    ap.add_argument("--check", action="store_true",
+                    help="CI mode: terse output, exit 1 on new findings")
+    ap.add_argument("--json", action="store_true",
+                    help="print the JSON report to stdout")
+    ap.add_argument("--json-out", metavar="FILE",
+                    help="also write the JSON report to FILE")
+    ap.add_argument("--select", metavar="NAMES",
+                    help="comma-separated pass/rule names to run")
+    ap.add_argument("--skip", metavar="NAMES",
+                    help="comma-separated pass/rule names to skip")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="ignore and do not write .lint_cache.json")
+    ap.add_argument("--baseline", metavar="FILE",
+                    help="baseline path (default: tools/lint/baseline.json"
+                         " under --root)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline and exit")
+    args = ap.parse_args(argv)
+
+    split = lambda s: [x.strip() for x in s.split(",") if x.strip()]
+    result = run_lint(
+        args.root,
+        select=split(args.select) if args.select else None,
+        skip=split(args.skip) if args.skip else None,
+        use_cache=not args.no_cache,
+        baseline_path=args.baseline)
+
+    if args.write_baseline:
+        write_baseline(result, result["baseline_path"])
+        print(f"[lint] baseline written: {result['baseline_path']} "
+              f"({len(result['findings'])} findings)")
+        return 0
+
+    report = {
+        "files": result["files"],
+        "new": len(result["new"]),
+        "baselined": len(result["findings"]) - len(result["new"]),
+        "suppressed": result["suppressed"],
+        "findings": [f.to_json() for f in result["findings"]],
+    }
+    if args.json_out:
+        with open(args.json_out, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=2)
+            fh.write("\n")
+    if args.json:
+        print(json.dumps(report, indent=2))
+    else:
+        shown = result["new"] if args.check else result["findings"]
+        for f in shown:
+            print(f.format())
+        status = "FAIL" if result["new"] else "OK"
+        print(f"[lint] {status}: {result['files']} files, "
+              f"{len(result['new'])} new finding(s), "
+              f"{report['baselined']} baselined, "
+              f"{result['suppressed']} suppressed")
+        if result["unused_baseline"]:
+            print(f"[lint] note: {result['unused_baseline']} stale "
+                  f"baseline entr(y/ies) no longer match — consider "
+                  f"--write-baseline")
+    return 1 if result["new"] else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
